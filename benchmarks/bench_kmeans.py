@@ -1,0 +1,25 @@
+"""K-Means benchmark — paper Figure 14 (ROP has no single associations to
+prefetch; CAPre prefetches the vector collections in parallel, gains come
+from the first, cold, iteration)."""
+
+from __future__ import annotations
+
+from repro.apps.kmeans import build_kmeans_app, initial_centroids, populate_kmeans
+
+from .common import MODES_SHORT, BenchResult, run_modes
+
+
+def run(reps: int = 3, sizes=(400, 1200)) -> list[BenchResult]:
+    results = []
+    for n in sizes:
+        cents = initial_centroids(k=4, dims=10)
+        results += run_modes(
+            "kmeans",
+            f"n{n}",
+            build_kmeans_app,
+            lambda store, n=n: populate_kmeans(store, n_vectors=n, dims=10),
+            lambda s, root: s.execute(root, "run", [list(c) for c in cents]),
+            modes=MODES_SHORT,
+            reps=reps,
+        )
+    return results

@@ -1,0 +1,38 @@
+"""OO7 benchmark — paper Figure 10 (traversals t1 and t2b, small/medium)."""
+
+from __future__ import annotations
+
+from repro.apps.oo7 import build_oo7_app, populate_oo7
+
+from .common import MODES, BenchResult, run_modes
+
+
+def bench_t1(reps: int = 3, sizes=("small", "medium")) -> list[BenchResult]:
+    results = []
+    for size in sizes:
+        results += run_modes(
+            "oo7_t1",
+            size,
+            build_oo7_app,
+            lambda store, size=size: populate_oo7(store, size=size),
+            lambda s, root: s.execute(root, "t1"),
+            modes=MODES,
+            reps=reps,
+        )
+    return results
+
+
+def bench_t2b(reps: int = 3) -> list[BenchResult]:
+    return run_modes(
+        "oo7_t2b",
+        "small",
+        build_oo7_app,
+        lambda store: populate_oo7(store, size="small"),
+        lambda s, root: s.execute(root, "t2b"),
+        modes=MODES,
+        reps=reps,
+    )
+
+
+def run(reps: int = 3) -> list[BenchResult]:
+    return bench_t1(reps=reps) + bench_t2b(reps=reps)

@@ -1,0 +1,49 @@
+"""Princeton Graph Algorithms benchmark — paper Figure 16 (DFS behaves like
+Wordcount; Bellman-Ford's data-dependent order defeats every compile-time
+predictor, but CAPre knows there is nothing to prefetch and adds ~no
+overhead while ROP keeps issuing useless loads)."""
+
+from __future__ import annotations
+
+from repro.apps.pga import build_pga_app, populate_pga
+from repro.pos.interp import ObjRef
+
+from .common import MODES_SHORT, BenchResult, run_modes
+
+MODES_PGA = (
+    ("none", None, 0),
+    ("rop_d1", "rop", 1),
+    ("rop_d2", "rop", 2),
+    ("capre", "capre", 0),
+)
+
+
+def run(reps: int = 3, n_vertices: int = 400) -> list[BenchResult]:
+    results = []
+
+    state = {}
+
+    def populate(store):
+        g, src = populate_pga(store, n_vertices=n_vertices, out_degree=4)
+        state[id(store)] = src
+        return g
+
+    results += run_modes(
+        "pga_dfs",
+        f"v{n_vertices}",
+        build_pga_app,
+        populate,
+        lambda s, root: s.execute(root, "dfs"),
+        modes=MODES_PGA,
+        reps=reps,
+    )
+    results += run_modes(
+        "pga_bellman_ford",
+        f"v{n_vertices}",
+        build_pga_app,
+        populate,
+        lambda s, root: s.execute(root, "bellmanFord", ObjRef(state[id(s.store)])),
+        modes=MODES_PGA,
+        reps=reps,
+    )
+    return results

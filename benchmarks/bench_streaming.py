@@ -1,0 +1,41 @@
+"""Weight-streaming benchmark — the TPU-side analogue of the paper's
+evaluation: plan-driven (CAPre) vs depth-limited (ROP) vs on-demand
+host->device parameter streaming for a layer-by-layer decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.access_plan import build_access_plan
+from repro.models.model import Model
+from repro.runtime.prefetch import HostParamStore, WeightStreamer
+
+
+def run(reps: int = 3) -> list[str]:
+    cfg = get_smoke_config("yi_34b").replace(n_layers=12, d_model=128, d_ff=384, n_heads=8, n_kv_heads=2, head_dim=0)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    plan = build_access_plan(
+        lambda p, c, t: model.decode_step(p, c, t, 8),
+        model.abstract_params(),
+        model.abstract_cache(4, 64),
+        jax.ShapeDtypeStruct((4, 1), jnp.int32),
+    )
+    lines = []
+    base = None
+    for mode in (None, "rop", "capre"):
+        walls, stalls, hits = [], 0, 0
+        for _ in range(reps):
+            store = HostParamStore(params, bandwidth_gbps=1.0, base_latency_s=400e-6)
+            ws = WeightStreamer(store, plan=plan, mode=mode, k_ahead=3, workers=8)
+            walls.append(ws.run_plan(compute_s_per_group=1.5e-3))
+            stalls, hits = ws.metrics.stalls, ws.metrics.prefetch_hits
+            ws.close()
+        mean = sum(walls) / len(walls)
+        if mode is None:
+            base = mean
+        improvement = f"improvement={100 * (1 - mean / base):.1f}%,stalls={stalls},hits={hits}"
+        lines.append(f"streaming/{mode or 'none'},{mean * 1e6:.0f},{improvement}")
+    return lines

@@ -1,0 +1,32 @@
+"""Wordcount benchmark — paper Figure 12 (chunk-count sweep: few large
+objects vs many small objects)."""
+
+from __future__ import annotations
+
+from repro.apps.wordcount import build_wordcount_app, populate_wordcount
+
+from .common import BenchResult, run_modes
+
+MODES_WC = (
+    ("none", None, 0),
+    ("rop_d1", "rop", 1),
+    ("rop_d3", "rop", 3),
+    ("capre", "capre", 0),
+)
+
+
+def run(reps: int = 3, chunk_sweep=(16, 64, 256)) -> list[BenchResult]:
+    results = []
+    for chunks in chunk_sweep:
+        results += run_modes(
+            "wordcount",
+            f"c{chunks}",
+            build_wordcount_app,
+            lambda store, c=chunks: populate_wordcount(
+                store, chunks_per_text=c, words_per_chunk=max(4, 2048 // c)
+            ),
+            lambda s, root: s.execute(root, "run"),
+            modes=MODES_WC,
+            reps=reps,
+        )
+    return results

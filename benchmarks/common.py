@@ -1,0 +1,117 @@
+"""Shared machinery for the paper-table benchmarks (section 7).
+
+Every benchmark runs a traversal under a set of prefetching modes
+(no-prefetch / ROP at several fetch depths / CAPre), repeats it ``reps``
+times on cold caches, and reports mean wall-clock execution time of the
+application thread (prefetch threads keep running in the background, exactly
+like the paper's injected executor)."""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.pos.client import POSClient
+from repro.pos.latency import LatencyModel
+
+# Latency model used for all paper benchmarks (see pos/latency.py for the
+# rationale; the paper's absolute numbers depend on their cluster, ours on
+# these constants — the *relative* behavior is what we reproduce).
+# One disk arm per Data Service (the paper's nodes have a single 5400rpm
+# HDD): reads and writes on one DS serialize; parallelism comes from the
+# four Data Services — which is exactly what makes CAPre's distributed
+# parallel prefetch profitable and ROP's useless reads costly.
+BENCH_LATENCY = LatencyModel(
+    disk_load=300e-6, remote_hop=120e-6, write_back=900e-6, think=100e-6, parallel_per_ds=1
+)
+
+MODES = (
+    ("none", None, 0),
+    ("rop_d1", "rop", 1),
+    ("rop_d2", "rop", 2),
+    ("rop_d5", "rop", 5),
+    ("capre", "capre", 0),
+)
+MODES_SHORT = (("none", None, 0), ("rop_d2", "rop", 2), ("capre", "capre", 0))
+
+
+@dataclass
+class BenchResult:
+    benchmark: str
+    config: str
+    mode: str
+    mean_s: float
+    stdev_s: float
+    reps: int
+    metrics: dict
+
+    @property
+    def improvement_vs(self) -> Optional[float]:
+        return None
+
+    def csv(self, baseline_s: Optional[float] = None) -> str:
+        us = self.mean_s * 1e6
+        derived = ""
+        if baseline_s:
+            derived = f"improvement={100.0 * (1 - self.mean_s / baseline_s):.1f}%"
+        return f"{self.benchmark}/{self.config}/{self.mode},{us:.0f},{derived}"
+
+
+def run_modes(
+    benchmark: str,
+    config: str,
+    build_app: Callable,
+    populate: Callable[[object], object],
+    run_once: Callable[[object, object], None],
+    modes=MODES,
+    reps: int = 3,
+    n_services: int = 4,
+    parallel_workers: int = 16,
+) -> list[BenchResult]:
+    """Build one store per mode (placement identical: same seeds), run
+    ``reps`` cold-cache repetitions, return one result per mode."""
+    out: list[BenchResult] = []
+    for mode_name, mode, depth in modes:
+        client = POSClient(n_services=n_services, latency=BENCH_LATENCY)
+        client.register(build_app())
+        root = populate(client.store)
+        times = []
+        metrics = {}
+        for _ in range(reps):
+            client.store.reset_runtime_state()
+            with client.session(
+                client.logic_module.registered and list(client.logic_module.registered)[0],
+                mode=mode,
+                rop_depth=depth,
+                parallel_workers=parallel_workers,
+            ) as s:
+                t0 = time.perf_counter()
+                run_once(s, root)
+                times.append(time.perf_counter() - t0)
+                s.drain(30.0)
+                metrics = client.store.metrics.snapshot()
+                metrics.update(client.store.prefetch_accuracy())
+        out.append(
+            BenchResult(
+                benchmark=benchmark,
+                config=config,
+                mode=mode_name,
+                mean_s=statistics.mean(times),
+                stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
+                reps=reps,
+                metrics=metrics,
+            )
+        )
+    return out
+
+
+def print_results(results: list[BenchResult]) -> None:
+    by_cfg: dict[tuple[str, str], float] = {}
+    for r in results:
+        if r.mode == "none":
+            by_cfg[(r.benchmark, r.config)] = r.mean_s
+    for r in results:
+        base = by_cfg.get((r.benchmark, r.config))
+        print(r.csv(baseline_s=base if r.mode != "none" else None))

@@ -1,0 +1,49 @@
+"""Compare two dry-run artifacts (baseline vs hillclimb variant): the
+hypothesis->change->measure loop's measurement step.
+
+Usage: PYTHONPATH=src python -m benchmarks.compare \
+    artifacts/dryrun/yi_34b__train_4k__single.json \
+    artifacts/dryrun/yi_34b__train_4k__single__sp.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from .roofline import roofline_terms
+
+
+def compare(a_path: str, b_path: str) -> dict:
+    a = json.loads(open(a_path).read())
+    b = json.loads(open(b_path).read())
+    ra, rb = roofline_terms(a), roofline_terms(b)
+    out = {"baseline": a_path, "variant": b_path, "overrides": b.get("overrides", {})}
+    for key in ("t_compute_s", "t_memory_s", "t_collective_s", "useful_ratio", "mfu_bound"):
+        va, vb = ra[key], rb[key]
+        delta = (vb - va) / va * 100 if va else float("inf")
+        out[key] = {"baseline": va, "variant": vb, "delta_pct": delta}
+    out["dominant"] = {"baseline": ra["dominant"], "variant": rb["dominant"]}
+    mem = ("mem_temp_size_in_bytes",)
+    for k in mem:
+        if k in a and k in b:
+            out[k] = {"baseline": a[k], "variant": b[k], "delta_pct": (b[k] - a[k]) / a[k] * 100}
+    return out
+
+
+def main() -> None:
+    res = compare(sys.argv[1], sys.argv[2])
+    print(f"baseline: {res['baseline']}")
+    print(f"variant:  {res['variant']}  overrides={res['overrides']}")
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s", "useful_ratio", "mfu_bound",
+              "mem_temp_size_in_bytes"):
+        if k not in res:
+            continue
+        v = res[k]
+        unit = " s" if k.startswith("t_") else ""
+        print(f"  {k:24s} {v['baseline']:.6g}{unit} -> {v['variant']:.6g}{unit}  ({v['delta_pct']:+.1f}%)")
+    print(f"  dominant: {res['dominant']['baseline']} -> {res['dominant']['variant']}")
+
+
+if __name__ == "__main__":
+    main()

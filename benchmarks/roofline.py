@@ -1,0 +1,117 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+  compute term    = FLOPs / (chips * 197e12)          [bf16 peak, v5e]
+  memory term     = bytes / (chips * 819e9)           [HBM bw]
+  collective term = coll_bytes_per_device / 50e9      [ICI link bw]
+                    (== global coll bytes / (chips * link_bw))
+
+FLOPs/bytes are the loop-aware jaxpr totals (launch/costmodel.py; XLA's own
+cost_analysis counts while bodies once — both are recorded in the artifact).
+Collective bytes come from the partitioned HLO with while-trip
+multiplication (launch/hlo_parse.py).
+
+The bound on achievable MFU for the cell is
+  mfu_bound = (MODEL_FLOPS / (chips * peak)) / max(terms)
+— the score the §Perf hillclimbs push up by driving the dominant term down.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+ADVICE = {
+    "compute": "raise arithmetic efficiency: cut dispatch/remat redundancy so HLO flops approach MODEL_FLOPS",
+    "memory": "cut HBM traffic: fuse elementwise chains, reuse KV blocks in VMEM (flash kernels), quantize cache",
+    "collective": "cut/overlap collectives: reduce-scatter instead of all-gather+all-reduce, async overlap with compute, shrink dtype on the wire",
+}
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for f in sorted(ART_DIR.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "ok":
+            cells.append(d)
+        elif d.get("status") == "skipped":
+            cells.append(d)
+    return cells
+
+
+def roofline_terms(cell: dict) -> dict:
+    chips = cell.get("chips", 256)
+    t_compute = cell["jaxpr_flops"] / (chips * PEAK_FLOPS)
+    t_memory = cell["jaxpr_bytes"] / (chips * HBM_BW)
+    t_coll = cell.get("hlo_collective_bytes_per_device", 0.0) / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    ideal = cell["model_flops"] / (chips * PEAK_FLOPS)
+    bound = ideal / max(max(terms.values()), 1e-30)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": cell["model_flops"],
+        "useful_ratio": cell["model_flops"] / max(cell["jaxpr_flops"], 1e-30),
+        "mfu_bound": bound,
+        "advice": ADVICE[dominant],
+    }
+
+
+def table(mesh: str = "single") -> list[str]:
+    """CSV lines for benchmarks.run + the detailed artifact."""
+    rows = []
+    detailed = []
+    for cell in load_cells(mesh):
+        name = f"roofline/{cell['arch']}/{cell['shape']}"
+        if cell["status"] == "skipped":
+            rows.append(f"{name},0,skipped")
+            continue
+        r = roofline_terms(cell)
+        detailed.append({**cell, **r})
+        rows.append(
+            f"{name},{r['t_compute_s']*1e6:.1f},"
+            f"dominant={r['dominant']};mem_us={r['t_memory_s']*1e6:.1f};"
+            f"coll_us={r['t_collective_s']*1e6:.1f};mfu_bound={r['mfu_bound']:.3f};"
+            f"useful={r['useful_ratio']:.3f}"
+        )
+    out = ART_DIR.parent / f"roofline_{mesh}.json"
+    out.write_text(json.dumps(detailed, indent=1, default=str))
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | MODEL_FLOPS/HLO | MFU bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for cell in load_cells(mesh):
+        if cell["status"] == "skipped":
+            lines.append(
+                f"| {cell['arch']} | {cell['shape']} | — | — | — | *skipped: full attention at 500k* | — | — |"
+            )
+            continue
+        r = roofline_terms(cell)
+        lines.append(
+            f"| {cell['arch']} | {cell['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | {r['mfu_bound']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    return table("single")
+
+
+if __name__ == "__main__":
+    print(markdown_table("single"))

@@ -1,0 +1,63 @@
+"""Benchmark driver: one section per paper table/figure, printing
+``name,us_per_call,derived`` CSV lines.
+
+Sections:
+  * oo7 t1/t2b        — Figure 10
+  * wordcount         — Figure 12
+  * kmeans            — Figure 14
+  * pga dfs/bf        — Figure 16
+  * analysis time     — Table 4 / Figure 8
+  * branch-dep corpus — Table 2
+  * streaming         — the TPU adaptation (CAPre-plan vs ROP-depth weight
+                        streaming; see benchmarks/bench_streaming.py)
+
+Environment: REPRO_BENCH_REPS (default 3), REPRO_BENCH_FAST=1 shrinks sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    reps = int(os.environ.get("REPRO_BENCH_REPS", "3"))
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+    from . import bench_analysis_time, bench_kmeans, bench_oo7, bench_pga, bench_wordcount
+    from .common import print_results
+
+    print("name,us_per_call,derived")
+
+    results = []
+    results += bench_oo7.bench_t1(reps=reps, sizes=("small",) if fast else ("small", "medium"))
+    results += bench_oo7.bench_t2b(reps=reps)
+    results += bench_wordcount.run(reps=reps, chunk_sweep=(16, 64) if fast else (16, 64, 256))
+    results += bench_kmeans.run(reps=reps, sizes=(400,) if fast else (400, 1200))
+    results += bench_pga.run(reps=reps, n_vertices=200 if fast else 400)
+    print_results(results)
+    sys.stdout.flush()
+
+    for line in bench_analysis_time.run():
+        print(line)
+
+    try:
+        from . import bench_streaming
+
+        for line in bench_streaming.run():
+            print(line)
+    except ImportError:
+        pass
+
+    # roofline terms per (arch x shape) from the dry-run artifacts, if present
+    try:
+        from . import roofline
+
+        for line in roofline.run():
+            print(line)
+    except Exception as e:  # artifacts may be absent on a fresh checkout
+        print(f"roofline/skipped,0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

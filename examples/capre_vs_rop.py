@@ -1,0 +1,29 @@
+"""CAPre vs ROP on the paper's four benchmarks (reduced sizes).
+
+Prints the execution-time comparison table the paper's section 7 draws:
+CAPre's code-derived hints vs the schema-heuristic Referenced-Objects
+Predictor at several fetch depths, on OO7 t1, Wordcount, K-Means, and both
+PGA algorithms.
+
+Run: PYTHONPATH=src python examples/capre_vs_rop.py
+"""
+
+from benchmarks.bench_kmeans import run as kmeans_run
+from benchmarks.bench_oo7 import bench_t1
+from benchmarks.bench_pga import run as pga_run
+from benchmarks.bench_wordcount import run as wc_run
+from benchmarks.common import print_results
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    results = []
+    results += bench_t1(reps=1, sizes=("small",))
+    results += wc_run(reps=1, chunk_sweep=(64,))
+    results += kmeans_run(reps=1, sizes=(400,))
+    results += pga_run(reps=1, n_vertices=200)
+    print_results(results)
+
+
+if __name__ == "__main__":
+    main()

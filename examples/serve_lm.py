@@ -1,0 +1,61 @@
+"""Serving example: batched prefill + decode with the CAPre access plan and
+plan-driven weight streaming.
+
+The decode step's parameter access plan is derived statically (jaxpr
+analysis — the paper's compile-time hints), then the same plan drives a
+host->device weight streamer whose background executor keeps the layer
+stack ahead of the compute frontier, compared against ROP-depth and
+on-demand baselines.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.access_plan import build_access_plan, rop_plan
+from repro.launch.serve import Server
+from repro.launch.steps import concrete_batch
+from repro.models.model import Model
+from repro.runtime.prefetch import HostParamStore, WeightStreamer
+
+
+def main() -> None:
+    cfg = get_smoke_config("yi_34b").replace(n_layers=12, d_model=256, d_ff=768,
+                                             n_heads=8, n_kv_heads=2, head_dim=0)
+    server = Server(cfg, max_len=64)
+    model = server.model
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    print("=== batched serving (prefill + decode) ===")
+    batch = concrete_batch(cfg, 4, 32)
+    batch.pop("targets")
+    t0 = time.perf_counter()
+    tokens = server.generate(params, batch, steps=16)
+    dt = time.perf_counter() - t0
+    print(f"generated {tokens.shape[0]}x{tokens.shape[1]} tokens in {dt:.2f}s")
+
+    print("\n=== CAPre access plan for one decode step ===")
+    plan = server.plan(batch_size=4)
+    print(f"{len(plan.records)} records, {len(plan.collections())} collections, "
+          f"{plan.total_bytes/1e6:.1f} MB predicted per step")
+    for h in plan.hints()[:6]:
+        print("  hint:", h)
+
+    print("\n=== plan-driven weight streaming vs baselines ===")
+    for mode in (None, "rop", "capre"):
+        store = HostParamStore(params, bandwidth_gbps=1.0, base_latency_s=400e-6)
+        ws = WeightStreamer(store, plan=plan, mode=mode, k_ahead=3, workers=8)
+        wall = ws.run_plan(compute_s_per_group=1.5e-3)
+        m = ws.metrics
+        ws.close()
+        print(f"  {mode or 'on-demand':10s}: {wall*1e3:7.1f} ms "
+              f"stalls={m.stalls:3d} stall_time={m.stall_seconds*1e3:6.1f} ms "
+              f"prefetch_hits={m.prefetch_hits}")
+
+
+if __name__ == "__main__":
+    main()

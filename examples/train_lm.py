@@ -1,0 +1,52 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on CPU with the full production stack — config, data pipeline with
+background prefetch, AdamW + warmup-cosine, async atomic checkpointing, and
+resume-from-checkpoint.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(defaults keep CPU wall time reasonable; pass --steps 300 for the full run)
+"""
+
+import argparse
+import tempfile
+
+from repro.configs import get_config
+from repro.launch.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # a ~100M-parameter reduction of the chatglm3 family (same components)
+    cfg = get_config("chatglm3_6b").replace(
+        n_layers=10, d_model=768, n_heads=12, n_kv_heads=2, head_dim=0,
+        d_ff=2048, vocab_size=32_000, remat="none", attn_chunk=128,
+    )
+    n = cfg.param_count()
+    print(f"model: {n/1e6:.1f}M params ({cfg.n_layers}L d={cfg.d_model})")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(
+            cfg, global_batch=args.batch, seq_len=args.seq,
+            ckpt_dir=ckpt_dir, total_steps=args.steps, log_every=10,
+        )
+        params, opt_state, losses = trainer.train(args.steps, save_every=100)
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+        assert losses[-1] < losses[0], "training must reduce the loss"
+
+        # prove resume: a fresh trainer restores from the checkpoint
+        trainer2 = Trainer(
+            cfg, global_batch=args.batch, seq_len=args.seq,
+            ckpt_dir=ckpt_dir, total_steps=args.steps,
+        )
+        p, o = trainer2.init_state()
+        start, _, _ = trainer2.maybe_restore(p, o)
+        print(f"resume check: restored step {start}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+CAPre's contribution is a *prefetching schedule derived from static
+analysis*.  On TPU the same idea lives at the kernel level: every kernel
+here is a statically-scheduled DMA pipeline —
+
+  * ``prefetch_gather``  — the CAPre poster child: the hint indices are
+    **scalar-prefetch operands** feeding the BlockSpec index_map, so the
+    Pallas pipeline issues the HBM->VMEM copies for the *predicted* rows
+    ahead of compute (embedding rows, expert banks, KV pages);
+  * ``flash_attention`` / ``decode_attention`` — KV blocks stream through
+    VMEM ahead of the MXU (double-buffered by the Pallas grid pipeline);
+  * ``rglru_scan`` / ``mamba_scan`` — sequential recurrences with the state
+    held in VMEM scratch while sequence blocks stream past it.
+
+Kernels target TPU (BlockSpec tiling aligned to 128-lane registers) and are
+validated on CPU in interpret mode against the pure-jnp oracles in ref.py.
+"""

@@ -1,0 +1,67 @@
+"""mamba_scan — the mamba1 selective-scan recurrence.
+
+  h_t = dA_t * h_{t-1} + dBu_t          (h: [C, N] per step)
+  y_t = h_t . C_t                       (contraction over the state dim N)
+
+Grid: (C/bc, S/bs), sequence innermost; the [bc, N] state sits in VMEM
+scratch while the per-step dA/dBu blocks stream past it.  N (the SSM state,
+16 for falcon-mamba) rides in the lane dimension of the streamed blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(dA_ref, dBu_ref, c_ref, y_ref, h_ref, *, bs: int):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dA = dA_ref[...].astype(jnp.float32)  # [bs, bc, N]
+    dBu = dBu_ref[...].astype(jnp.float32)  # [bs, bc, N]
+    cm = c_ref[...].astype(jnp.float32)  # [bs, N]
+
+    def step(t, carry):
+        h, ys = carry
+        h = dA[t] * h + dBu[t]  # [bc, N]
+        y = jnp.sum(h * cm[t][None, :], axis=1)  # [bc]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return (h, ys)
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros((bs, dA.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, bs, step, (h0, ys0))
+    h_ref[...] = h
+    y_ref[...] = ys.astype(y_ref.dtype)
+
+
+def mamba_scan_kernel(dA, dBu, C, *, block_s: int = 128, block_c: int = 512,
+                      interpret: bool = True):
+    """dA, dBu [S, Ch, N]; C [S, N] -> y [S, Ch]."""
+    S, Ch, N = dA.shape
+    bs, bc = min(block_s, S), min(block_c, Ch)
+    assert S % bs == 0 and Ch % bc == 0
+    grid = (Ch // bc, S // bs)
+    kernel = functools.partial(_mamba_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bc, N), lambda c, s: (s, c, 0)),
+            pl.BlockSpec((bs, bc, N), lambda c, s: (s, c, 0)),
+            pl.BlockSpec((bs, N), lambda c, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, bc), lambda c, s: (s, c)),
+        out_shape=jax.ShapeDtypeStruct((S, Ch), dA.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, N), jnp.float32)],
+        interpret=interpret,
+        name="mamba_scan",
+    )(dA, dBu, C)

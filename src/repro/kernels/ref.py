@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are tested against, on all shapes/dtypes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q [B, Sq, H, D]; k, v [B, Sk, KV, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k, preferred_element_type=jnp.float32)
+    s = s / (D**0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where((kpos <= qpos)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, Sq, H, D)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q [B, H, D]; k, v [B, S, KV, D]; kv_len scalar -> [B, H, D]."""
+    B, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", q5, k, preferred_element_type=jnp.float32) / (D**0.5)
+    mask = jnp.arange(k.shape[1])[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, H, D)
+
+
+def prefetch_gather_ref(table, idx):
+    """table [N, D]; idx [B] -> [B, D]."""
+    return jnp.take(table, idx, axis=0)
+
+
+def rglru_scan_ref(a, g, h0=None):
+    """a, g [S, M] -> y [S, M] with h_t = a_t * h_{t-1} + g_t, y_t = h_t."""
+    S, M = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((M,), jnp.float32)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t.astype(jnp.float32) * h + g_t.astype(jnp.float32)
+        return h, h
+
+    _, ys = jax.lax.scan(step, h0, (a, g))
+    return ys.astype(a.dtype)
+
+
+def mamba_scan_ref(dA, dBu, C, h0=None):
+    """dA, dBu [S, Ch, N]; C [S, N] -> y [S, Ch] (h_t = dA*h + dBu;
+    y = h . C_t)."""
+    S, Ch, N = dA.shape
+    if h0 is None:
+        h0 = jnp.zeros((Ch, N), jnp.float32)
+
+    def step(h, inp):
+        dA_t, dBu_t, C_t = inp
+        h = dA_t.astype(jnp.float32) * h + dBu_t.astype(jnp.float32)
+        y = jnp.einsum("cn,n->c", h, C_t.astype(jnp.float32))
+        return h, y
+
+    _, ys = jax.lax.scan(step, h0, (dA, dBu, C))
+    return ys.astype(dA.dtype)

@@ -1,0 +1,62 @@
+"""rglru_scan — the RG-LRU recurrence h_t = a_t * h_t-1 + g_t.
+
+Grid: (M/bm, S/bs) with the sequence dimension innermost: for each channel
+block the state lives in VMEM scratch while sequence blocks stream past it.
+Inputs are the precomputed per-step decay ``a`` and gated input ``g``
+(elementwise products are fused upstream); channels are the 128-lane axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, g_ref, y_ref, h_ref, *, bs: int):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)  # [bs, bm]
+    g = g_ref[...].astype(jnp.float32)
+
+    def step(t, carry):
+        h, ys = carry
+        h = a[t] * h + g[t]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, h, t, 0)
+        return (h, ys)
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros(a.shape, jnp.float32)
+    h, ys = jax.lax.fori_loop(0, bs, step, (h0, ys0))
+    h_ref[...] = h
+    y_ref[...] = ys.astype(y_ref.dtype)
+
+
+def rglru_scan_kernel(a, g, *, block_s: int = 256, block_m: int = 512,
+                      interpret: bool = True):
+    """a, g [S, M] -> y [S, M] (h_0 = 0)."""
+    S, M = a.shape
+    bs, bm = min(block_s, S), min(block_m, M)
+    assert S % bs == 0 and M % bm == 0
+    grid = (M // bm, S // bs)  # sequence innermost (sequential)
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bm), lambda m, s: (s, m)),
+            pl.BlockSpec((bs, bm), lambda m, s: (s, m)),
+        ],
+        out_specs=pl.BlockSpec((bs, bm), lambda m, s: (s, m)),
+        out_shape=jax.ShapeDtypeStruct((S, M), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+        name="rglru_scan",
+    )(a, g)

@@ -1,0 +1,11 @@
+"""Small JAX API compatibility layer (pinned against jax 0.8.x)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map with varying-manual-axes checking off (we use psum /
+    axis_index freely inside bodies)."""
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)

@@ -1,0 +1,222 @@
+"""Loop-aware cost analysis.
+
+XLA's HloCostAnalysis (what ``compiled.cost_analysis()`` reports) counts a
+``while`` body ONCE, so a 60-layer ``lax.scan`` under-reports FLOPs by 60x.
+This module walks the *jaxpr* instead: ``scan`` bodies are multiplied by
+their static trip count, ``pjit``/``remat``/``custom_*`` sub-jaxprs are
+recursed into, and ``shard_map`` bodies (whose avals are per-shard) are
+scaled back to global by the mesh size.
+
+Outputs (GLOBAL, whole-step totals):
+  * ``flops``            — 2*M*N*K for dot_general/conv, |out| for elementwise
+  * ``bytes``            — HBM-traffic estimate: in+out bytes for
+                           materializing ops (dot, gather, scatter, reduce,
+                           concat, slice/update, collectives, scan carries),
+                           out-bytes only for elementwise chains (assumed
+                           fused by XLA)
+  * ``collective_bytes`` — explicit collectives found in the jaxpr
+                           (shard_map psum/all_to_all/...); the pjit-induced
+                           collectives (gradient reductions etc.) are counted
+                           separately from the partitioned HLO (hlo_parse.py)
+
+The two sources are combined by launch/dryrun.py and reported per cell in
+EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+MATERIALIZING = {
+    "gather", "scatter", "scatter-add", "dynamic_slice", "dynamic_update_slice",
+    "concatenate", "pad", "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "argmax", "argmin", "cumsum", "cumlogsumexp", "cummax", "cumprod", "sort",
+    "top_k", "iota", "reshape", "transpose", "rev", "broadcast_in_dim",
+}
+
+COLLECTIVES = {"psum", "all_to_all", "ppermute", "all_gather", "psum_scatter", "pbroadcast"}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    dot_flops: float = 0.0
+    notes: list = field(default_factory=list)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        self.dot_flops += other.dot_flops
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.collective_bytes * k,
+                    self.dot_flops * k, list(self.notes))
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _nelems(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    lfree = math.prod(
+        d for i, d in enumerate(lhs.shape) if i not in lc and i not in lb
+    )
+    rfree = math.prod(
+        d for i, d in enumerate(rhs.shape) if i not in rc and i not in rb
+    )
+    return 2.0 * batch * lfree * rfree * contract
+
+
+def _sub_jaxprs(eqn):
+    """(jaxpr, multiplier) pairs for higher-order primitives."""
+    p = eqn.primitive.name
+    params = eqn.params
+    if p == "scan":
+        return [(params["jaxpr"].jaxpr, params["length"])]
+    if p == "while":
+        # no static trip count at jaxpr level; callers of the step fns only
+        # use scan, so flag it
+        return [(params["body_jaxpr"].jaxpr, 1)]
+    if p in ("pjit", "closed_call", "core_call", "custom_vjp_call_jaxpr", "remat2", "remat", "checkpoint"):
+        j = params.get("jaxpr") or params.get("call_jaxpr") or params.get("fun_jaxpr")
+        if j is not None:
+            return [(getattr(j, "jaxpr", j), 1)]
+    if p in ("custom_jvp_call", "custom_vjp_call"):
+        j = params.get("call_jaxpr") or params.get("fun_jaxpr")
+        if j is not None:
+            return [(getattr(j, "jaxpr", j), 1)]
+    if p == "cond":
+        # branch-dependent (CAPre section 4.4!): cost = max over branches
+        return [("cond", params["branches"])]
+    if p == "shard_map":
+        mesh = params.get("mesh")
+        size = getattr(mesh, "size", None) or 1
+        j = params.get("jaxpr")
+        return [(getattr(j, "jaxpr", j), ("shard_map", size))]
+    return []
+
+
+def jaxpr_cost(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        p = eqn.primitive.name
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for sub, mult in subs:
+                if sub == "cond":
+                    branch_costs = [jaxpr_cost(b.jaxpr) for b in mult]
+                    worst = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    total += worst
+                elif isinstance(mult, tuple) and mult[0] == "shard_map":
+                    body = jaxpr_cost(sub)
+                    total += body.scaled(mult[1])  # per-shard -> global
+                else:
+                    body = jaxpr_cost(sub)
+                    total += body.scaled(mult)
+            if p == "scan":
+                # scan carries stream through HBM once per iteration
+                carry_bytes = sum(_nbytes(v.aval) for v in eqn.outvars)
+                total.bytes += carry_bytes
+            if p == "while":
+                total.notes.append("while-without-trip-count")
+            continue
+
+        out_bytes = sum(_nbytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_nbytes(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+        if p == "pallas_call":
+            total += _pallas_cost(eqn, in_bytes, out_bytes)
+        elif p == "dot_general":
+            f = _dot_flops(eqn)
+            total.flops += f
+            total.dot_flops += f
+            total.bytes += in_bytes + out_bytes
+        elif p in ("conv_general_dilated",):
+            # rare here; approximate with output * kernel elements * 2
+            total.flops += 2.0 * _nelems(eqn.outvars[0].aval) * _nelems(eqn.invars[1].aval)
+            total.bytes += in_bytes + out_bytes
+        elif p in COLLECTIVES:
+            total.collective_bytes += out_bytes
+            total.bytes += in_bytes + out_bytes
+        elif p == "dynamic_update_slice":
+            # donated buffers update in place: traffic = read update + write
+            # the touched region (NOT the whole buffer)
+            upd = _nbytes(eqn.invars[1].aval) if len(eqn.invars) > 1 else out_bytes
+            total.bytes += 2 * upd
+        elif p in ("gather", "dynamic_slice"):
+            # reads only the gathered/sliced rows (+ indices), writes out
+            idx = _nbytes(eqn.invars[1].aval) if len(eqn.invars) > 1 else 0
+            total.bytes += 2 * out_bytes + idx
+        elif p in ("scatter", "scatter-add", "scatter_add"):
+            upd = _nbytes(eqn.invars[2].aval) if len(eqn.invars) > 2 else out_bytes
+            total.bytes += 2 * upd
+        elif any(p.startswith(m) or p == m for m in MATERIALIZING) or p.startswith("reduce"):
+            total.flops += _nelems(eqn.outvars[0].aval) if eqn.outvars else 0
+            total.bytes += in_bytes + out_bytes
+        else:
+            # elementwise: assume fused into producers; count the write
+            total.flops += sum(_nelems(v.aval) for v in eqn.outvars)
+            total.bytes += out_bytes
+    return total
+
+
+def _pallas_cost(eqn, in_bytes: float, out_bytes: float) -> Cost:
+    """Kernel-true costs: Pallas kernels stream operands HBM->VMEM exactly
+    once (the grid pipeline) and keep intermediates in VMEM, so bytes =
+    operands + results; FLOPs computed per kernel from operand shapes."""
+    name = str(eqn.params.get("name", "")) or str(eqn.params.get("name_and_src_info", ""))
+    c = Cost(bytes=in_bytes + out_bytes)
+    avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+    if "flash_bwd_dkdv" in name and len(avals) >= 2:
+        q, k = avals[0], avals[1]
+        BH, Sq, D = q.shape[-3:]
+        Sk = k.shape[-2]
+        c.flops = 8.0 * BH * Sq * Sk * D  # qk recompute + dp + dv + dk
+        c.dot_flops = c.flops
+    elif "flash_bwd_dq" in name and len(avals) >= 2:
+        q, k = avals[0], avals[1]
+        BH, Sq, D = q.shape[-3:]
+        Sk = k.shape[-2]
+        c.flops = 6.0 * BH * Sq * Sk * D  # qk recompute + dp + dq
+        c.dot_flops = c.flops
+    elif "flash" in name and len(avals) >= 2:
+        q, k = avals[0], avals[1]  # [BH, Sq, D], [BKV, Sk, D]
+        BH, Sq, D = q.shape[-3:]
+        Sk = k.shape[-2]
+        c.flops = 4.0 * BH * Sq * Sk * D  # qk^T + pv
+        c.dot_flops = c.flops
+    elif "decode" in name and len(avals) >= 3:
+        q, k = avals[1], avals[2]  # (len, q [BH, D], k [BKV, S, D], ...)
+        BH, D = q.shape[-2:]
+        Sk = k.shape[-2]
+        c.flops = 4.0 * BH * Sk * D
+        c.dot_flops = c.flops
+    else:
+        c.flops = sum(_nelems(v.aval) for v in eqn.outvars)
+    return c
+
+
+def step_cost(fn, *abstract_args, **kw) -> Cost:
+    jaxpr = jax.make_jaxpr(fn, **kw)(*abstract_args)
+    return jaxpr_cost(jaxpr.jaxpr)

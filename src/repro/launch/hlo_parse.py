@@ -1,0 +1,149 @@
+"""Collective extraction from the partitioned (post-SPMD) HLO text.
+
+``compiled.as_text()`` shapes are PER-DEVICE after partitioning.  We sum the
+output-shape bytes of every collective op (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), multiplying ops inside
+``while`` bodies by the loop trip count (extracted from the comparison
+constant in the condition computation — the form ``lax.scan`` lowers to).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(
+    r"\b(all-gather-start|all-gather-done|all-gather|"
+    r"all-reduce-start|all-reduce-done|all-reduce|"
+    r"reduce-scatter|all-to-all|"
+    r"collective-permute-start|collective-permute-done|collective-permute|"
+    r"while|fusion|call|conditional|async-start)\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple HLO type text like
+    ``(f32[8,128], bf16[4])`` or ``f32[8,128]``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class _Computation:
+    name: str
+    collective_bytes: float = 0.0
+    collective_counts: dict = field(default_factory=dict)
+    # (body_comp, cond_comp) pairs for while ops in this computation
+    whiles: list = field(default_factory=list)
+    # other called computations (fusions, call) — counted once
+    calls: list = field(default_factory=list)
+    max_constant: int = 1
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-$]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def parse_computations(hlo_text: str):
+    """Returns (computations dict, entry computation name or None)."""
+    comps: dict[str, _Computation] = {}
+    entry_name = None
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        header = _HEADER_RE.match(stripped)
+        if header and "=" not in stripped.split("(")[0]:
+            cur = _Computation(name=header.group(2))
+            comps[cur.name] = cur
+            if header.group(1):
+                entry_name = cur.name
+            continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        # constants (for while trip counts): s32[] constant(123)
+        mc = re.search(r"constant\((\d+)\)", s)
+        if mc:
+            cur.max_constant = max(cur.max_constant, int(mc.group(1)))
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        rest = m.group(2)
+        # find "<type> <opcode>(" by searching for a known opcode token
+        op_m = _OPCODE_RE.search(rest)
+        if not op_m:
+            continue
+        type_str, opcode = rest[: op_m.start()], op_m.group(1)
+        if opcode.endswith("-done"):
+            continue  # async pair: bytes counted at the -start op
+        if opcode == "while":
+            body = re.search(r"body=%?([\w.\-]+)", rest)
+            cond = re.search(r"condition=%?([\w.\-]+)", rest)
+            if body and cond:
+                cur.whiles.append((body.group(1), cond.group(1)))
+        elif opcode in ("fusion", "call", "conditional", "async-start"):
+            for cm in re.finditer(r"(?:calls|to_apply|branch_computations=\{)=?%?([\w.\-]+)", rest):
+                cur.calls.append(cm.group(1))
+        elif any(opcode == c or opcode.startswith(c + "-") for c in COLLECTIVE_OPS):
+            base = next(c for c in COLLECTIVE_OPS if opcode.startswith(c))
+            b = _shape_bytes(type_str)
+            cur.collective_bytes += b
+            cur.collective_counts[base] = cur.collective_counts.get(base, 0) + 1
+    return comps, entry_name
+
+
+def collective_bytes(hlo_text: str, entry: str | None = None) -> dict:
+    """Per-device collective bytes for the entry computation, with while
+    bodies multiplied by their trip counts."""
+    comps, entry_name = parse_computations(hlo_text)
+    if not comps:
+        return {"bytes_per_device": 0.0, "counts": {}, "warnings": ["no computations parsed"]}
+    if entry is None:
+        entry = entry_name or next(
+            (n for n in comps if n.startswith("main") or "entry" in n), next(iter(comps))
+        )
+    warnings: list[str] = []
+    counts: dict[str, float] = {}
+
+    def visit(name: str, mult: float, seen: tuple) -> float:
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return 0.0
+        total = comp.collective_bytes * mult
+        for op, c in comp.collective_counts.items():
+            counts[op] = counts.get(op, 0) + c * mult
+        for body, cond in comp.whiles:
+            trip = comps[cond].max_constant if cond in comps else 1
+            if trip <= 1:
+                warnings.append(f"while {body}: trip count not found, using 1")
+                trip = 1
+            total += visit(body, mult * trip, seen + (name,))
+        for callee in comp.calls:
+            total += visit(callee, mult, seen + (name,))
+        return total
+
+    total = visit(entry, 1.0, ())
+    return {"bytes_per_device": total, "counts": counts, "warnings": warnings}

@@ -1,0 +1,102 @@
+"""Serving driver: batched prefill + decode loop with the CAPre access plan
+wired in (the plan is printed/exported so operators can see exactly what the
+step will touch — the paper's prefetching hints for the tensor store).
+
+Usage (CPU-scale example):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.access_plan import build_access_plan
+from repro.launch.steps import concrete_batch, make_decode_step, make_prefill_step
+
+
+class Server:
+    def __init__(self, cfg, mesh=None, max_len: int = 256):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.max_len = max_len
+        self.model, self.prefill_fn = make_prefill_step(cfg, mesh)
+        _, self.decode_fn = make_decode_step(cfg, mesh)
+        self._jit_prefill = jax.jit(self.prefill_fn)
+        self._jit_decode = jax.jit(self.decode_fn, donate_argnums=(1,))
+
+    def plan(self, batch_size: int):
+        """The CAPre access plan of one decode step (compile-time, no
+        allocation)."""
+        return build_access_plan(
+            lambda p, c, t: self.decode_fn(p, c, t, 0),
+            self.model.abstract_params(),
+            self.model.abstract_cache(batch_size, self.max_len),
+            jax.ShapeDtypeStruct((batch_size, 1), jnp.int32),
+        )
+
+    def generate(self, params, batch: dict, steps: int, greedy: bool = True):
+        """Prefill the prompt batch, then decode ``steps`` tokens."""
+        B, S = batch["inputs"].shape
+        # pad the cache to max_len so decode steps have static shapes
+        pad = self.max_len - S
+        if pad > 0 and self.cfg.family in ("dense", "moe", "encdec"):
+            pass  # cache padding handled below via prefill on padded inputs
+        logits, cache = self._jit_prefill(params, batch)
+        cache = self._pad_cache(cache, S)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [tok]
+        for i in range(steps - 1):
+            logits, cache = self._jit_decode(params, cache, tok, S + i)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    def _pad_cache(self, cache: dict, cur_len: int) -> dict:
+        """Grow seq-dim cache buffers to max_len (static decode shapes)."""
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "encdec"):
+            pad = self.max_len - cache["k"].shape[2]
+            if pad > 0:
+                for key in ("k", "v"):
+                    c = cache[key]
+                    cache[key] = jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return cache
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    server = Server(cfg, max_len=args.prompt_len + args.gen)
+    plan = server.plan(args.batch)
+    print(f"access plan: {len(plan.records)} records, "
+          f"{len(plan.collections())} collections, {plan.total_bytes/1e6:.1f} MB")
+    for h in plan.hints()[:8]:
+        print("  hint:", h)
+
+    model = server.model
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, args.batch, args.prompt_len)
+    batch.pop("targets", None)
+    t0 = time.perf_counter()
+    tokens = server.generate(params, batch, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"generated {tokens.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", tokens[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Step functions (train / prefill / decode) and their abstract input specs
+— the single place the dry-run, the trainer and the server build jitted
+steps from.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.optim import AdamW, warmup_cosine
+
+from .mesh import data_axes
+
+
+def mesh_info_for(cfg: ModelConfig, mesh) -> Optional[tuple]:
+    """(mesh, data_axes, model_axis) for the MoE expert-parallel path.
+
+    Under FSDP the expert banks are gathered per layer like every other
+    weight and routing runs device-local (model_axis=None selects the
+    shard_map fsdp-local path in moe_apply)."""
+    if mesh is None or cfg.family != "moe":
+        return None
+    dp = data_axes(mesh)
+    if cfg.parallelism == "fsdp":
+        return (mesh, dp + ("model",), None)
+    if cfg.parallelism == "ep_a2a":
+        return (mesh, dp + ("model",), "model", "ep_a2a")
+    # "tp" and "fsdp_ep": expert parallelism over `model`, batch over data
+    return (mesh, dp if len(dp) > 1 else dp[0], "model")
+
+
+def make_optimizer(total_steps: int = 10_000) -> AdamW:
+    warmup = max(1, min(200, total_steps // 10))
+    return AdamW(learning_rate=warmup_cosine(3e-4, warmup, total_steps))
+
+
+def make_train_step(cfg: ModelConfig, mesh=None, optimizer: Optional[AdamW] = None):
+    """Returns (model, optimizer, train_step(params, opt_state, batch))."""
+    model = Model(cfg)
+    opt = optimizer or make_optimizer()
+    minfo = mesh_info_for(cfg, mesh)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, batch, minfo))(params)
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return model, opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    model = Model(cfg)
+    minfo = mesh_info_for(cfg, mesh)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, minfo)
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    model = Model(cfg)
+    minfo = mesh_info_for(cfg, mesh)
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, minfo)
+
+    return model, decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStructs — no allocation), per shape kind
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract batch for train/prefill; for decode, the abstract
+    (cache, tokens, pos) triple is provided by ``decode_input_specs``."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    batch = {"inputs": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.embeds_input:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f32)
+        if cfg.rope == "mrope":
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_positions, cfg.d_model), f32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple:
+    """(cache, tokens, pos) abstract inputs for one serve_step: one new token
+    against a KV cache of seq_len."""
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.abstract_cache(B, S)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def concrete_batch(cfg: ModelConfig, shape_or_bs, seq_len: Optional[int] = None, rng=None):
+    """Small concrete batch for tests/examples (deterministic)."""
+    if isinstance(shape_or_bs, ShapeConfig):
+        B, S = shape_or_bs.global_batch, shape_or_bs.seq_len
+    else:
+        B, S = shape_or_bs, seq_len
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    batch = {
+        "inputs": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.embeds_input:
+        batch["embeds"] = 0.02 * jax.random.normal(k3, (B, S, cfg.d_model), jnp.float32)
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+            batch["positions"] = jnp.broadcast_to(pos[None], (3, B, S))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(
+            k3, (B, cfg.enc_positions, cfg.d_model), jnp.float32
+        )
+    return batch

@@ -1,0 +1,2 @@
+"""Model substrate: layers, families (dense / MoE / SSM / hybrid / enc-dec),
+parameter templates, KV caches and step functions."""

@@ -1,0 +1,117 @@
+"""Shared model utilities: logical-axis sharding constraints and the
+parameter-template mechanism (single source of truth for parameter shapes,
+initializers, logical sharding axes, and abstract ShapeDtypeStructs)."""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding constraints
+# ---------------------------------------------------------------------------
+# Model code annotates activations with *logical* axes ("batch", "embed",
+# "heads", ...).  The launcher activates a (mesh, rules) context mapping
+# logical axes to mesh axes; outside a context the annotations are no-ops, so
+# the same model code runs on one CPU device and on the production mesh.
+
+_CTX = threading.local()
+
+
+@contextmanager
+def activate_sharding(mesh, rules: dict[str, Optional[object]]):
+    prev = getattr(_CTX, "ctx", None)
+    _CTX.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.ctx = prev
+
+
+def current_mesh_rules():
+    return getattr(_CTX, "ctx", None)
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint by logical axis names (None = unsharded dim)."""
+    ctx = getattr(_CTX, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = P(*[rules.get(a) if a is not None else None for a in axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def logical_to_pspec(axes: tuple, rules: dict) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+# ---------------------------------------------------------------------------
+# Parameter templates
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical axis per dim
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+
+    def abstract(self, dtype) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, dtype)
+
+
+def init_from_template(template, rng: jax.Array, dtype) -> dict:
+    """Materialize a parameter pytree from a template of ParamSpecs."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            out.append(spec.scale * jax.random.normal(key, spec.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_from_template(template, dtype) -> dict:
+    return jax.tree.map(
+        lambda s: s.abstract(dtype), template, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def pspecs_from_template(template, rules: dict) -> dict:
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.axes, rules),
+        template,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_bytes(template, bytes_per_el: int = 4) -> int:
+    total = 0
+    for s in jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * bytes_per_el
+    return total
+
+
+def param_count(template) -> int:
+    total = 0
+    for s in jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

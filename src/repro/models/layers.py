@@ -1,0 +1,292 @@
+"""Core layers: norms, rotary-embedding variants, MLPs, and grouped-query
+attention with three implementations:
+
+  * ``naive``   — materializes the [.., S_q, S_k] score matrix;
+  * ``chunked`` — online-softmax over KV chunks (flash-attention algorithm in
+                  pure jnp; bounded memory, what the dry-run lowers for long
+                  sequences);
+  * decode      — one-token query against a static-shape KV cache with a
+                  position mask.
+
+All matmuls run in the config's compute dtype (bf16 by default); softmax and
+norms accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(kind: str, x, scale, bias=None):
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale)
+    return layernorm(x, scale, bias)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (default / half / mrope / none / sinusoidal)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [...], returns cos/sin of shape [..., dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """x [..., dim] with interleaved halves convention: split in two halves."""
+    d = x.shape[-1] // 2
+    x1, x2 = x[..., :d], x[..., d:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(kind: str, x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] (or [3, B, S] for mrope)."""
+    if kind in ("none", "sinusoidal"):
+        return x
+    hd = x.shape[-1]
+    if kind == "default":
+        cos, sin = _rope_angles(positions, hd, theta)  # [B, S, hd/2]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return _rotate(x, cos, sin)
+    if kind == "half":
+        # rotate only the first half of the head dim (ChatGLM 2d / partial)
+        rot, keep = x[..., : hd // 2], x[..., hd // 2 :]
+        cos, sin = _rope_angles(positions, hd // 2, theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return jnp.concatenate([_rotate(rot, cos, sin), keep], axis=-1)
+    if kind == "mrope":
+        # Multimodal rope (qwen2-vl): the head dim is split into (t, h, w)
+        # sections, each rotated by its own position stream.
+        # positions: [3, B, S]
+        half = hd // 2
+        sec = _mrope_sections(half)
+        cos_parts, sin_parts = [], []
+        for i, width in enumerate(sec):
+            c, s = _rope_angles(positions[i], 2 * width, theta)
+            cos_parts.append(c)
+            sin_parts.append(s)
+        cos = jnp.concatenate(cos_parts, axis=-1)[:, :, None, :]  # [B,S,1,half]
+        sin = jnp.concatenate(sin_parts, axis=-1)[:, :, None, :]
+        return _rotate(x, cos, sin)
+    raise ValueError(f"unknown rope kind {kind}")
+
+
+def _mrope_sections(half: int) -> tuple[int, int, int]:
+    """(t, h, w) frequency sections; qwen2-vl uses (16, 24, 24) for hd=128."""
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    """Absolute sinusoidal position embeddings [..., d_model]."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(kind: str, x, p, compute_dtype):
+    """p: dict with wi_gate/wi_up/wo (gated) or wi/wo (plain)."""
+    cast = lambda w: w.astype(compute_dtype)
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        g = x @ cast(p["wi_gate"])
+        u = x @ cast(p["wi_up"])
+        h = act(g) * u
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ cast(p["wi"]) + (cast(p["bi"]) if "bi" in p else 0))
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ cast(p["wi"])))
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    h = constrain(h, "batch", "inner_seq", "act_ff")
+    out = h @ cast(p["wo"])
+    if "bo" in p:
+        out = out + cast(p["bo"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n_heads: int, head_dim: int):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def gqa_attention(
+    q,  # [B, Sq, H, hd]
+    k,  # [B, Sk, KV, hd]
+    v,  # [B, Sk, KV, hd]
+    *,
+    causal: bool,
+    impl: str = "chunked",
+    chunk: int = 1024,
+    q_offset: int = 0,
+    local_window: int = 0,
+    kv_len: Optional[jax.Array] = None,  # decode: number of valid kv slots
+):
+    """Grouped-query attention.  ``q_offset`` positions the queries within
+    the kv sequence (prefill chunking / decode).  ``local_window`` > 0 adds a
+    sliding-window constraint.  ``kv_len`` masks cache slots >= kv_len."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd**0.5)
+
+    if (
+        impl == "pallas"
+        and Sq > 1
+        and kv_len is None
+        and local_window == 0
+        and Sq % 128 == 0
+        and k.shape[1] % 128 == 0
+    ):
+        # the Pallas flash kernel: scores/probs never touch HBM.  The cost
+        # model prices the pallas_call from its operands (the kernel's true
+        # HBM traffic); TPU executes the kernel, CPU tests run interpret.
+        from repro.kernels.ops import flash_attention_trainable as _flash
+
+        return _flash(q, k, v, causal, q_offset)
+
+    q5 = q.reshape(B, Sq, KV, G, hd)
+
+    if impl in ("naive",) or Sq == 1:
+        return _attn_naive(q5, k, v, scale, causal, q_offset, local_window, kv_len).reshape(
+            B, Sq, H, hd
+        )
+    return _attn_chunked(q5, k, v, scale, causal, q_offset, local_window, kv_len, chunk).reshape(
+        B, Sq, H, hd
+    )
+
+
+def _mask(Sq, Sk, q_offset, causal, local_window, kv_len, k_offset=0):
+    qpos = q_offset + jnp.arange(Sq)[:, None]  # [Sq, 1]
+    kpos = k_offset + jnp.arange(Sk)[None, :]  # [1, Sk]
+    m = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        m &= kpos <= qpos
+    if local_window:
+        m &= kpos > qpos - local_window
+    if kv_len is not None:
+        m &= kpos < kv_len
+    return m
+
+
+def _attn_naive(q5, k, v, scale, causal, q_offset, local_window, kv_len):
+    B, Sq, KV, G, hd = q5.shape
+    Sk = k.shape[1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q5, k, preferred_element_type=jnp.float32) * scale
+    mask = _mask(Sq, Sk, q_offset, causal, local_window, kv_len)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q5.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def _attn_chunked(q5, k, v, scale, causal, q_offset, local_window, kv_len, chunk):
+    """Online-softmax over KV chunks (the flash-attention recurrence)."""
+    B, Sq, KV, G, hd = q5.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q5, kb, preferred_element_type=jnp.float32) * scale
+        mask = _mask(
+            Sq,
+            chunk,
+            q_offset,
+            causal,
+            local_window,
+            jnp.minimum(Sk, kv_len) if kv_len is not None else Sk,
+            k_offset=idx * chunk,
+        )
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), q5.dtype)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # [B, Sq, KV, G, hd]
+
+
+def qkv_project(x, p, cfg, compute_dtype):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,KV,hd]."""
+    cast = lambda w: w.astype(compute_dtype)
+    q = x @ cast(p["wq"])
+    k = x @ cast(p["wk"])
+    v = x @ cast(p["wv"])
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"])
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def attn_output(o, p, cfg, compute_dtype):
+    B, S, H, hd = o.shape
+    out = o.reshape(B, S, H * hd) @ p["wo"].astype(compute_dtype)
+    if cfg.attn_out_bias and "bo" in p:
+        out = out + p["bo"].astype(compute_dtype)
+    return out

@@ -1,0 +1,60 @@
+"""RecurrentGemma building blocks: the RG-LRU recurrent (temporal-mix) block.
+
+RG-LRU recurrence (Griffin / RecurrentGemma, arXiv:2402.19427):
+
+  r_t = sigmoid(W_a x_t)                       (recurrence gate)
+  i_t = sigmoid(W_x x_t)                       (input gate)
+  log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The published model uses block-diagonal gate matrices; we use dense
+[lru, lru] gates (recorded in DESIGN.md as a simplification that slightly
+*increases* parameter count and FLOPs — conservative for roofline claims).
+The Pallas ``rglru_scan`` kernel replaces the lax.scan on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain
+from .ssm import depthwise_causal_conv
+
+_C = 8.0
+
+
+def rglru_scan(x, r, i, lam, h0=None):
+    """x, r, i: [B, S, W]; lam: [W]. Returns (y [B,S,W], h_final [B,W])."""
+    B, S, W = x.shape
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32) * jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    (h, ys) = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h
+
+
+def recurrent_block(x, p, cfg, compute_dtype, conv_state=None, rec_state=None):
+    """RecurrentGemma temporal-mix block.
+
+    x [B, S, d] -> (out [B, S, d], new_conv_state, new_rec_state)."""
+    cast = lambda w: w.astype(compute_dtype)
+    # y branch: linear + GELU
+    y_branch = jax.nn.gelu(x @ cast(p["wy"]))
+    # x branch: linear -> causal conv -> RG-LRU
+    xb = x @ cast(p["wx"])
+    xb = constrain(xb, "batch", "inner_seq", "act_ff")
+    xb, new_conv = depthwise_causal_conv(xb, p["conv_w"], p.get("conv_b"), conv_state)
+    r = jax.nn.sigmoid(xb @ cast(p["w_a"]))
+    i = jax.nn.sigmoid(xb @ cast(p["w_x"]))
+    lru, new_rec = rglru_scan(xb, r, i, p["lam"], h0=rec_state)
+    out = (lru * y_branch) @ cast(p["out_w"])
+    return out, new_conv, new_rec

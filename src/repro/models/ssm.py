@@ -1,0 +1,94 @@
+"""Mamba-1 block (falcon-mamba-7b): depthwise causal conv + selective scan.
+
+Train/prefill run the recurrence with ``lax.scan`` over the sequence (the
+Pallas ``mamba_scan`` kernel replaces this hot loop on TPU; ``kernels/
+mamba_scan/ref.py`` is this exact recurrence).  Decode is a single recurrence
+step carrying (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain
+
+
+def depthwise_causal_conv(x, w, b, state=None):
+    """x [B, S, C], w [C, K] depthwise causal conv.
+
+    If ``state`` [B, K-1, C] is given (decode), it is the running tail of
+    previous inputs; returns (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    if state is None:
+        ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, j : j + S, :] * w[:, j].astype(x.dtype) for j in range(K))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    new_state = ctx[:, -(K - 1) :, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y, new_state
+
+
+def selective_scan(u, dt, A, B_ssm, C_ssm, D, h0=None):
+    """The mamba1 SSM recurrence.
+
+    u      [B, S, C]   (post-conv activations)
+    dt     [B, S, C]   (softplus'd step sizes)
+    A      [C, N]      (negative; A = -exp(A_log))
+    B_ssm  [B, S, N]
+    C_ssm  [B, S, N]
+    D      [C]
+    h0     [B, C, N] initial state (decode) or None
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) outer B_t
+    y_t = (h_t . C_t) + D * u_t
+    returns (y [B, S, C], h_final [B, C, N])
+    """
+    Bsz, S, C = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, C, N), jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        # the discretized dA_t/dBu_t are computed per step: materializing
+        # them for the whole sequence would be an O(B*S*C*N) tensor
+        # (tens of GB per device at d_inner=8192)
+        dt_t, dtu_t, B_t, C_t = inp  # [B,C], [B,C], [B,N], [B,N]
+        dA_t = jnp.exp(dt_t[..., None] * Af)  # [B,C,N]
+        h = dA_t * h + dtu_t[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, C_t)
+        return h, y
+
+    xs = (
+        dt.astype(jnp.float32).transpose(1, 0, 2),
+        (dt * u).astype(jnp.float32).transpose(1, 0, 2),
+        B_ssm.astype(jnp.float32).transpose(1, 0, 2),
+        C_ssm.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + D.astype(jnp.float32) * u.astype(jnp.float32)
+    return y.astype(u.dtype), h
+
+
+def mamba_block(x, p, cfg, compute_dtype, conv_state=None, ssm_state=None):
+    """Full mamba1 mixer. x [B, S, d] -> (y [B, S, d], new conv/ssm states)."""
+    cast = lambda w: w.astype(compute_dtype)
+    di = cfg.d_inner
+    xz = x @ cast(p["in_proj"])  # [B, S, 2*di]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", "inner_seq", "act_ff")
+    x_conv, new_conv = depthwise_causal_conv(x_in, p["conv_w"], p.get("conv_b"), conv_state)
+    u = jax.nn.silu(x_conv)
+    proj = u @ cast(p["x_proj"])  # [B, S, R + 2N]
+    R, N = cfg.dt_rank, cfg.ssm_state
+    dt_raw, B_ssm, C_ssm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ cast(p["dt_w"]) + cast(p["dt_b"]))  # [B, S, di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = selective_scan(u, dt, A, B_ssm, C_ssm, p["D"], h0=ssm_state)
+    y = y * jax.nn.silu(z)
+    out = y @ cast(p["out_proj"])
+    return out, new_conv, h

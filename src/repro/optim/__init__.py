@@ -1,0 +1,2 @@
+from .adamw import AdamW, clip_by_global_norm  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

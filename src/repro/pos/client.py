@@ -1,0 +1,169 @@
+"""dataClay-like client & Logic Module (paper section 6).
+
+Application classes are registered with the Logic Module; CAPre intercepts
+the registration, runs the static analysis, and generates + injects the
+prefetching methods.  A ``Session`` then executes registered methods against
+the store under one of three prefetching modes:
+
+  * ``None``      — no prefetching (the paper's baseline),
+  * ``"capre"``   — hint-driven prefetching (this paper),
+  * ``"rop"``     — Referenced-Objects Predictor at a configurable fetch
+                    depth: every application-path cache miss eagerly schedules
+                    the object's referenced single associations (never
+                    collections) up to ``rop_depth`` levels.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core import lang
+from repro.core.hints import AnalysisReport, analyze_application
+from repro.core.injection import generate_all
+from repro.core.lower import lower_application
+from repro.core.rop import rop_referenced_fields
+from repro.core.type_graph import INCLUDE_BRANCH_DEPENDENT
+
+from .executor import PrefetchRuntime
+from .interp import Interpreter
+from .store import ObjectStore
+
+
+@dataclass
+class RegisteredApp:
+    app: lang.Application
+    report: AnalysisReport
+    prefetch_methods: dict[str, object]
+    lowering_time_s: float = 0.0
+    analysis_time_s: float = 0.0
+
+
+class LogicModule:
+    """Schema registry; CAPre hooks the registration process here."""
+
+    def __init__(self):
+        self.registered: dict[str, RegisteredApp] = {}
+
+    def register(
+        self, app: lang.Application, policy: str = INCLUDE_BRANCH_DEPENDENT
+    ) -> RegisteredApp:
+        t0 = time.perf_counter()
+        lower_application(app)  # the "compilation" (Wala IR generation)
+        t1 = time.perf_counter()
+        report = analyze_application(app, policy=policy)
+        prefetch = generate_all(report)
+        t2 = time.perf_counter()
+        reg = RegisteredApp(
+            app=app,
+            report=report,
+            prefetch_methods=prefetch,
+            lowering_time_s=t1 - t0,
+            analysis_time_s=t2 - t1,
+        )
+        self.registered[app.name] = reg
+        return reg
+
+
+@dataclass
+class SessionConfig:
+    mode: Optional[str] = None  # None | "capre" | "rop"
+    rop_depth: int = 1
+    parallel_workers: int = 8
+
+
+class Session:
+    def __init__(self, store: ObjectStore, reg: RegisteredApp, config: SessionConfig = None):
+        self.store = store
+        self.reg = reg
+        self.app = reg.app
+        self.config = config or SessionConfig()
+        self.runtime = PrefetchRuntime(parallel_workers=self.config.parallel_workers)
+        self._rop_fields: dict[str, list[tuple[str, str]]] = {}
+        self._rop_issued: set[int] = set()
+        if self.config.mode == "rop":
+            for cls in self.app.classes:
+                self._rop_fields[cls] = rop_referenced_fields(self.app, cls)
+            store_self = self
+
+            def _on_miss(oid: int) -> None:
+                store_self._rop_trigger(oid)
+
+            self.store.miss_listener = _on_miss
+        else:
+            self.store.miss_listener = None
+
+    # -- injected prefetch scheduling (CAPre) ---------------------------------
+
+    def on_method_entry(self, method_key: str, this_oid: int) -> None:
+        if self.config.mode != "capre":
+            return
+        fn = self.reg.prefetch_methods.get(method_key)
+        if fn is None:
+            return
+        self.runtime.schedule(lambda: fn(self.store, self.runtime, this_oid))
+
+    # -- ROP eager fetch -------------------------------------------------------
+
+    def _rop_trigger(self, oid: int) -> None:
+        if oid in self._rop_issued:
+            return
+        self._rop_issued.add(oid)
+        depth = self.config.rop_depth
+        store = self.store
+
+        def bfs(root_oid: int) -> None:
+            frontier = [root_oid]
+            for _ in range(depth):
+                nxt: list[int] = []
+                for o in frontier:
+                    rec = store.record(o)
+                    for fld, _target in self._rop_fields.get(rec.cls, ()):
+                        ref = rec.fields.get(fld)
+                        if ref is None:
+                            continue
+                        store.prefetch_access(ref)
+                        nxt.append(ref)
+                frontier = nxt
+                if not frontier:
+                    break
+
+        self.runtime.fan_out(bfs, [oid])
+
+    # -- execution ---------------------------------------------------------------
+
+    def execute(self, root_oid: int, method: str, *args):
+        interp = Interpreter(self)
+        return interp.execute(root_oid, method, args)
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        return self.runtime.drain(timeout)
+
+    def close(self) -> None:
+        self.store.miss_listener = None
+        self.runtime.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class POSClient:
+    """Convenience facade: one store + one Logic Module."""
+
+    def __init__(self, n_services: int = 4, latency=None):
+        from .latency import ZERO
+
+        self.store = ObjectStore(n_services=n_services, latency=latency or ZERO)
+        self.logic_module = LogicModule()
+
+    def register(self, app: lang.Application, policy: str = INCLUDE_BRANCH_DEPENDENT) -> RegisteredApp:
+        return self.logic_module.register(app, policy)
+
+    def session(self, app_name: str, mode: Optional[str] = None, rop_depth: int = 1, parallel_workers: int = 8) -> Session:
+        reg = self.logic_module.registered[app_name]
+        return Session(self.store, reg, SessionConfig(mode=mode, rop_depth=rop_depth, parallel_workers=parallel_workers))

@@ -1,0 +1,74 @@
+"""Prefetch execution runtime (paper sections 5.2.2-5.2.3).
+
+Mirrors the generated Java code:
+
+  * a **single-thread** scheduling executor (the injected
+    ``Executors.newFixedThreadPool(1)``) runs the generated prefetch methods
+    one after another in the background, so the application thread is never
+    interrupted;
+  * inside a prefetch method, collection hints fan out over a **shared
+    parallel pool** (the JVM parallel-streams ForkJoin pool; its size is the
+    number of cores).  Fan-out tasks are non-blocking — a task loads its
+    object and submits its children — so nested collections cannot starve
+    the bounded pool.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class PrefetchRuntime:
+    def __init__(self, parallel_workers: int = 8):
+        self._scheduler = ThreadPoolExecutor(max_workers=1, thread_name_prefix="prefetch-sched")
+        self._pool = ThreadPoolExecutor(max_workers=parallel_workers, thread_name_prefix="prefetch-par")
+        self._outstanding = 0
+        self._lock = threading.Lock()
+        self._idle = threading.Event()
+        self._idle.set()
+        self.scheduled = 0
+
+    # -- task accounting -----------------------------------------------------
+
+    def _inc(self) -> None:
+        with self._lock:
+            self._outstanding += 1
+            self._idle.clear()
+
+    def _dec(self) -> None:
+        with self._lock:
+            self._outstanding -= 1
+            if self._outstanding == 0:
+                self._idle.set()
+
+    def _wrap(self, fn, *args):
+        try:
+            fn(*args)
+        finally:
+            self._dec()
+
+    # -- API -----------------------------------------------------------------
+
+    def schedule(self, fn) -> None:
+        """Submit a generated prefetch method to the background executor
+        (the paper's injected ``prefetchingExecutor.submit``)."""
+        self.scheduled += 1
+        self._inc()
+        self._scheduler.submit(self._wrap, fn)
+
+    def fan_out(self, fn, items) -> None:
+        """Parallel-streams analogue: run ``fn(item)`` on the shared pool.
+        Non-blocking: returns immediately."""
+        for it in items:
+            self._inc()
+            self._pool.submit(self._wrap, fn, it)
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """Wait until all scheduled prefetch work has finished."""
+        return self._idle.wait(timeout)
+
+    def shutdown(self) -> None:
+        self.drain(timeout=5.0)
+        self._scheduler.shutdown(wait=True, cancel_futures=True)
+        self._pool.shutdown(wait=True, cancel_futures=True)

@@ -1,0 +1,258 @@
+"""The distributed object store: Data Services, object placement, caches and
+the access cost accounting (paper section 6).
+
+Semantics mirrored from dataClay:
+
+  * objects never leave the store; execution is redirected to the Data
+    Service holding the object ("dataClay does not send the objects to the
+    client but rather executes the methods locally in the same Data Service
+    where the object is stored");
+  * each Data Service has a local memory cache over its disk; *prefetching
+    loads the object where it is stored* — it removes the disk load from the
+    application's critical path but not the execution redirection;
+  * stored collections are automatically distributed among the available
+    Data Services (round-robin), which is what makes parallel prefetching
+    profitable.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Optional
+
+from .latency import LatencyModel, ZERO
+
+
+@dataclass
+class PersistentObject:
+    oid: int
+    cls: str
+    fields: dict[str, Any] = field(default_factory=dict)  # refs: oid / [oid]; prims: value
+
+
+class DataService:
+    def __init__(self, ds_id: int, latency: LatencyModel, cache_capacity: int = 0):
+        self.ds_id = ds_id
+        self.latency = latency
+        self.disk: dict[int, PersistentObject] = {}
+        # LRU memory cache (capacity 0 = unbounded, the paper's regime);
+        # a bounded cache exposes prefetch thrashing: useless ROP prefetches
+        # evict objects the application still needs
+        self.cache_capacity = cache_capacity
+        self.cache: dict[int, None] = {}
+        self._cache_lock = threading.Lock()
+        self._slots = threading.Semaphore(max(1, latency.parallel_per_ds))
+        # request coalescing: concurrent loads of the same object share one
+        # disk read — the second requester waits out the remaining latency
+        self._inflight: dict[int, threading.Event] = {}
+        self.evictions = 0
+
+    def _touch(self, oid: int) -> None:
+        """LRU bump + bounded-capacity eviction (callers hold the lock)."""
+        self.cache.pop(oid, None)
+        self.cache[oid] = None
+        if self.cache_capacity and len(self.cache) > self.cache_capacity:
+            victim = next(iter(self.cache))
+            del self.cache[victim]
+            self.evictions += 1
+
+    def is_cached(self, oid: int) -> bool:
+        with self._cache_lock:
+            return oid in self.cache
+
+    def load_into_memory(self, oid: int) -> bool:
+        """Disk -> memory. Returns True if this call performed the disk load
+        (False: cached, or coalesced onto an in-flight load)."""
+        with self._cache_lock:
+            if oid in self.cache:
+                self._touch(oid)
+                return False
+            ev = self._inflight.get(oid)
+            if ev is None:
+                ev = threading.Event()
+                self._inflight[oid] = ev
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            ev.wait(timeout=5.0)
+            return False
+        try:
+            with self._slots:
+                self.latency.sleep(self.latency.disk_load)
+            with self._cache_lock:
+                self._touch(oid)
+                self._inflight.pop(oid, None)
+        finally:
+            ev.set()
+        return True
+
+    def write_back(self, oid: int) -> None:
+        with self._slots:
+            self.latency.sleep(self.latency.write_back)
+
+    def drop_cache(self) -> None:
+        with self._cache_lock:
+            self.cache.clear()
+            for ev in self._inflight.values():
+                ev.set()
+            self._inflight.clear()
+
+
+@dataclass
+class StoreMetrics:
+    app_loads: int = 0
+    app_cache_hits: int = 0
+    app_cache_misses: int = 0
+    remote_hops: int = 0
+    writes: int = 0
+    prefetch_loads: int = 0  # disk loads performed by prefetch threads
+    prefetch_requests: int = 0  # objects prefetch looked at (incl. cache hits)
+
+    def snapshot(self) -> dict[str, int]:
+        return dict(self.__dict__)
+
+
+class ExecutionContext:
+    """Tracks where the current application thread is executing (which Data
+    Service) so navigation costs can charge execution redirection."""
+
+    def __init__(self, store: "ObjectStore"):
+        self.store = store
+        self.current_ds: Optional[int] = None
+
+
+class ObjectStore:
+    """The POS: N Data Services + placement + cost accounting."""
+
+    def __init__(self, n_services: int = 4, latency: LatencyModel = ZERO,
+                 cache_capacity: int = 0):
+        self.latency = latency
+        self.services = [
+            DataService(i, latency, cache_capacity) for i in range(n_services)
+        ]
+        self._placement: dict[int, int] = {}  # oid -> ds_id
+        self._oid_counter = itertools.count(1)
+        self._rr = itertools.count()
+        self._metrics_lock = threading.Lock()
+        self.metrics = StoreMetrics()
+        # accuracy accounting (true/false positives of prefetching)
+        self.accessed_oids: set[int] = set()
+        self.prefetched_oids: set[int] = set()
+        self.trace: Optional[list[int]] = None  # set to [] to record accesses
+        # optional callback fired on every application-path cache miss —
+        # how the ROP baseline hooks its eager referenced-object fetch
+        self.miss_listener = None
+
+    # -- placement ---------------------------------------------------------
+
+    def new_oid(self) -> int:
+        return next(self._oid_counter)
+
+    def put(self, cls: str, fields: Optional[dict[str, Any]] = None, ds: Optional[int] = None) -> int:
+        """Store a new object; round-robin placement unless pinned."""
+        oid = self.new_oid()
+        if ds is None:
+            ds = next(self._rr) % len(self.services)
+        obj = PersistentObject(oid=oid, cls=cls, fields=fields or {})
+        self.services[ds].disk[oid] = obj
+        self._placement[oid] = ds
+        return oid
+
+    def service_of(self, oid: int) -> DataService:
+        return self.services[self._placement[oid]]
+
+    def record(self, oid: int) -> PersistentObject:
+        return self.service_of(oid).disk[oid]
+
+    def cls_of(self, oid: int) -> str:
+        return self.record(oid).cls
+
+    # -- application-path access -------------------------------------------
+
+    def app_access(self, ctx: ExecutionContext, oid: int) -> PersistentObject:
+        """Navigate to ``oid`` on the application thread: redirect execution
+        to the owning Data Service if needed, then ensure the object is in
+        that service's memory."""
+        ds = self.service_of(oid)
+        if ctx.current_ds != ds.ds_id:
+            self.latency.sleep(self.latency.remote_hop)
+            ctx.current_ds = ds.ds_id
+            with self._metrics_lock:
+                self.metrics.remote_hops += 1
+        did_load = ds.load_into_memory(oid)
+        with self._metrics_lock:
+            self.metrics.app_loads += 1
+            if did_load:
+                self.metrics.app_cache_misses += 1
+            else:
+                self.metrics.app_cache_hits += 1
+            self.accessed_oids.add(oid)
+            if self.trace is not None:
+                self.trace.append(oid)
+        if did_load and self.miss_listener is not None:
+            self.miss_listener(oid)
+        self.latency.sleep(self.latency.think)
+        return ds.disk[oid]
+
+    def app_write(self, oid: int) -> None:
+        ds = self.service_of(oid)
+        ds.write_back(oid)
+        with self._metrics_lock:
+            self.metrics.writes += 1
+
+    # -- prefetch-path access ----------------------------------------------
+
+    def prefetch_access(self, oid: int) -> PersistentObject:
+        """Load ``oid`` into its own Data Service's memory (no execution
+        redirection: 'dataClay ... loads the object where it is stored')."""
+        ds = self.service_of(oid)
+        did_load = ds.load_into_memory(oid)
+        with self._metrics_lock:
+            self.metrics.prefetch_requests += 1
+            if did_load:
+                self.metrics.prefetch_loads += 1
+            self.prefetched_oids.add(oid)
+        return ds.disk[oid]
+
+    def peek(self, oid: int) -> PersistentObject:
+        """Read a record without cost accounting (builders / assertions)."""
+        return self.record(oid)
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def reset_runtime_state(self) -> None:
+        """Drop all caches and counters (between benchmark repetitions)."""
+        for ds in self.services:
+            ds.drop_cache()
+        with self._metrics_lock:
+            self.metrics = StoreMetrics()
+            self.accessed_oids = set()
+            self.prefetched_oids = set()
+            if self.trace is not None:
+                self.trace = []
+
+    # -- accuracy ------------------------------------------------------------
+
+    def prefetch_accuracy(self) -> dict[str, float]:
+        """True positives: prefetched & accessed. False positives: prefetched
+        but never accessed. False negatives: accessed but never prefetched."""
+        tp = len(self.prefetched_oids & self.accessed_oids)
+        fp = len(self.prefetched_oids - self.accessed_oids)
+        fn = len(self.accessed_oids - self.prefetched_oids)
+        denom_p = max(1, tp + fp)
+        denom_r = max(1, tp + fn)
+        return {
+            "true_positives": tp,
+            "false_positives": fp,
+            "false_negatives": fn,
+            "precision": tp / denom_p,
+            "recall": tp / denom_r,
+        }
+
+    def populate_collection(self, cls: str, payloads: Iterable[dict[str, Any]]) -> list[int]:
+        """Store many objects of one class round-robin across Data Services
+        (how dataClay distributes a stored collection)."""
+        return [self.put(cls, p) for p in payloads]

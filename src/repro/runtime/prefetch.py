@@ -1,0 +1,207 @@
+"""Plan-driven weight streaming — CAPre's prefetch executor on the tensor
+store (DESIGN.md section 2).
+
+The "persistent object store" here is host DRAM holding offloaded
+parameters; the "application" is a layer-by-layer step execution.  Like the
+paper's injected prefetch methods:
+
+  * a **background executor** walks the PrefetchPlan (derived statically by
+    ``core.access_plan``) and issues host->device copies ``k_ahead`` groups
+    ahead of the compute frontier — zero runtime monitoring;
+  * **collections** (stacked layer weights) fan out over a parallel pool —
+    the paper's parallelStream() over a distributed collection;
+  * the **ROP baseline** only ever fetches the next ``depth`` directly
+    referenced groups when a group is entered (schema-only, no plan), and
+    never streams collections ahead.
+
+On real hardware the fetch is a ``jax.device_put`` onto the TPU; here the
+host store models transfer latency so the overlap accounting is real.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.access_plan import AccessRecord, PrefetchPlan
+
+
+@dataclass
+class StreamMetrics:
+    fetches: int = 0
+    prefetch_hits: int = 0
+    stalls: int = 0
+    stall_seconds: float = 0.0
+    bytes_moved: int = 0
+    wasted_bytes: int = 0  # prefetched but never used
+
+
+class HostParamStore:
+    """Host-DRAM parameter store with modeled host->device bandwidth."""
+
+    def __init__(self, params: dict, bandwidth_gbps: float = 8.0, base_latency_s: float = 200e-6):
+        import jax
+
+        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+        from repro.core.access_plan import _path_str
+
+        self.arrays = {_path_str(p): np.asarray(v) for p, v in leaves}
+        self.bandwidth = bandwidth_gbps * 1e9
+        self.base_latency = base_latency_s
+
+    def fetch(self, path: str) -> np.ndarray:
+        arr = self.arrays[path]
+        time.sleep(self.base_latency + arr.nbytes / self.bandwidth)
+        return arr
+
+    def nbytes(self, path: str) -> int:
+        return self.arrays[path].nbytes
+
+
+class WeightStreamer:
+    """Streams parameter groups onto the device ahead of use.
+
+    mode:
+      * "capre": follows the PrefetchPlan order, ``k_ahead`` groups ahead,
+        collections fanned out on the parallel pool;
+      * "rop":   when a group is entered, fetch the next ``rop_depth``
+        groups in tree order (schema heuristic, plan-blind);
+      * None:    fetch on demand (every use stalls).
+    """
+
+    def __init__(
+        self,
+        store: HostParamStore,
+        plan: Optional[PrefetchPlan] = None,
+        mode: Optional[str] = "capre",
+        k_ahead: int = 2,
+        rop_depth: int = 1,
+        workers: int = 4,
+    ):
+        self.store = store
+        self.plan = plan
+        self.mode = mode
+        self.k_ahead = k_ahead
+        self.rop_depth = rop_depth
+        self.metrics = StreamMetrics()
+        self._cache: dict[str, np.ndarray] = {}
+        self._inflight: dict[str, threading.Event] = {}
+        self._lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=workers, thread_name_prefix="stream")
+        self._groups = self._group_order()
+        self._done = False
+
+    # -- grouping ------------------------------------------------------------
+
+    def _group_order(self) -> list[list[AccessRecord]]:
+        """Execution-ordered groups of records (one group per first_use
+        cluster — for a layer-scanned model: embed, layers, head...)."""
+        if self.plan is None:
+            return []
+        ordered = self.plan.ordered()
+        groups: list[list[AccessRecord]] = []
+        for r in ordered:
+            if groups and r.first_use == groups[-1][0].first_use:
+                groups[-1].append(r)
+            else:
+                groups.append([r])
+        return groups
+
+    # -- fetch machinery --------------------------------------------------------
+
+    def _fetch_async(self, path: str) -> None:
+        with self._lock:
+            if path in self._cache or path in self._inflight:
+                return
+            ev = threading.Event()
+            self._inflight[path] = ev
+
+        def work():
+            arr = self.store.fetch(path)
+            with self._lock:
+                self._cache[path] = arr
+                self.metrics.fetches += 1
+                self.metrics.bytes_moved += arr.nbytes
+                self._inflight.pop(path, None)
+            ev.set()
+
+        self._pool.submit(work)
+
+    def get(self, path: str) -> np.ndarray:
+        """Blocking access from the compute thread."""
+        with self._lock:
+            arr = self._cache.get(path)
+            ev = self._inflight.get(path)
+        if arr is not None:
+            self.metrics.prefetch_hits += 1
+            return arr
+        t0 = time.perf_counter()
+        if ev is None:
+            self._fetch_async(path)
+            with self._lock:
+                ev = self._inflight.get(path)
+        if ev is not None:
+            ev.wait(timeout=30.0)
+        self.metrics.stalls += 1
+        self.metrics.stall_seconds += time.perf_counter() - t0
+        with self._lock:
+            return self._cache[path]
+
+    # -- the injected scheduling points ------------------------------------------
+
+    def on_group_start(self, group_index: int) -> None:
+        """Called when the compute frontier enters group ``group_index`` —
+        the analogue of the injected prefetch-method invocation."""
+        if self.mode == "capre":
+            for gi in range(group_index + 1, min(group_index + 1 + self.k_ahead, len(self._groups))):
+                for rec in self._groups[gi]:
+                    self._fetch_async(rec.path)
+        elif self.mode == "rop":
+            for gi in range(group_index + 1, min(group_index + 1 + self.rop_depth, len(self._groups))):
+                # ROP cannot prefetch collections (section 2): skip stacked
+                # layer groups entirely
+                for rec in self._groups[gi]:
+                    if not rec.collection:
+                        self._fetch_async(rec.path)
+
+    def run_plan(self, compute_s_per_group: float = 0.0,
+                 compute_fn: Optional[Callable[[int, dict], None]] = None) -> float:
+        """Execute the plan end to end: for each group, prefetch-ahead fires,
+        then the compute thread `get`s every record in the group (stalling
+        on misses) and runs the group compute.  Returns wall seconds."""
+        t0 = time.perf_counter()
+        if self.mode in ("capre", "rop"):
+            self.on_group_start(-1)
+        for gi, group in enumerate(self._groups):
+            arrays = {}
+            for rec in group:
+                arrays[rec.path] = self.get(rec.path)
+            self.on_group_start(gi)
+            if compute_fn is not None:
+                compute_fn(gi, arrays)
+            elif compute_s_per_group:
+                time.sleep(compute_s_per_group)
+            self._evict_before(gi)
+        wall = time.perf_counter() - t0
+        with self._lock:
+            used = {r.path for g in self._groups for r in g}
+            for p, a in self._cache.items():
+                if p not in used:
+                    self.metrics.wasted_bytes += a.nbytes
+        return wall
+
+    def _evict_before(self, gi: int) -> None:
+        """Free groups already consumed (bounded device memory)."""
+        if gi < 1:
+            return
+        with self._lock:
+            for rec in self._groups[gi - 1]:
+                self._cache.pop(rec.path, None)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True, cancel_futures=True)

@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one train step (loss + grads) and one prefill->decode chain on CPU,
+asserting output shapes and the absence of NaNs.  The FULL configs are
+exercised only by the dry-run (launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import Model
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    kt, ke, kf = jax.random.split(rng, 3)
+    batch = {
+        "inputs": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.embeds_input:
+        batch["embeds"] = jax.random.normal(ke, (B, S, cfg.d_model), jnp.float32)
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+            batch["positions"] = jnp.broadcast_to(pos[None], (3, B, S))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(kf, (B, cfg.enc_positions, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch).replace(attn_impl="chunked", attn_chunk=8, remat="none")
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    batch = _batch(cfg, rng)
+
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: model.loss_fn(p, batch)))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    assert float(loss) > 0
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32)**2) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: grad norm not finite"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_then_decode(arch):
+    cfg = get_smoke_config(arch).replace(attn_impl="chunked", attn_chunk=8, remat="none")
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init_params(rng)
+    batch = _batch(cfg, rng)
+
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b))(params, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: prefill logits NaN"
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(lambda p, c, t: model.decode_step(p, c, t, S))(params, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all(), f"{arch}: decode logits NaN"
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_dimensions(arch):
+    """The FULL configs carry the exact published dimensions (no allocation:
+    template/abstract only)."""
+    cfg = get_config(arch)
+    model = Model(cfg)
+    n = cfg.param_count()
+    assert n > 0
+    abstract = model.abstract_params()
+    # vocab rows padded to a multiple of 256 for even TP sharding
+    vp = abstract["embed"].shape[0]
+    assert vp % 256 == 0 and cfg.vocab_size <= vp < cfg.vocab_size + 256
+    assert abstract["embed"].shape[1] == cfg.d_model
+
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+    "chatglm3_6b": (28, 4096, 32, 2, 13696, 65024),
+    "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+    "qwen1_5_4b": (40, 2560, 20, 20, 6912, 151936),
+    "minitron_8b": (32, 4096, 32, 8, 16384, 256000),
+    "qwen2_vl_2b": (28, 1536, 12, 2, 8960, 151936),
+    "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+    "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936),
+    "granite_moe_1b_a400m": (24, 1024, 16, 8, 512, 49155),
+    "falcon_mamba_7b": (64, 4096, 1, 1, 0, 65024),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_dimensions_match_spec(arch):
+    cfg = get_config(arch)
+    exp = EXPECTED[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size) == exp
+
+
+def test_moe_param_counts_plausible():
+    q = get_config("qwen3_moe_30b_a3b")
+    total, active = q.param_count(), q.active_param_count()
+    assert 25e9 < total < 36e9, f"qwen3-moe total {total/1e9:.1f}B"
+    assert 2e9 < active < 5e9, f"qwen3-moe active {active/1e9:.1f}B"
+    g = get_config("granite_moe_1b_a400m")
+    assert 0.8e9 < g.param_count() < 1.8e9
+    assert 0.2e9 < g.active_param_count() < 0.8e9
+
+
+def test_dense_param_counts_plausible():
+    assert 30e9 < get_config("yi_34b").param_count() < 40e9
+    assert 6e9 < get_config("falcon_mamba_7b").param_count() < 9e9
+    assert 5.5e9 < get_config("chatglm3_6b").param_count() < 8e9

@@ -1,0 +1,202 @@
+"""Tests for the four paper-benchmark applications: static-analysis hints,
+execution correctness against pure-Python oracles, and the structural claims
+the paper's evaluation relies on."""
+
+from collections import Counter
+
+import pytest
+
+from repro.apps.kmeans import build_kmeans_app, initial_centroids, populate_kmeans, _nearest
+from repro.apps.oo7 import build_oo7_app, populate_oo7
+from repro.apps.pga import build_pga_app, populate_pga
+from repro.apps.wordcount import build_wordcount_app, populate_wordcount
+from repro.core.hints import analyze_application
+from repro.core.rop import rop_hints
+from repro.pos.client import POSClient
+from repro.pos.latency import ZERO
+
+
+# ---------------------------------------------------------------------------
+# Static analysis
+# ---------------------------------------------------------------------------
+
+
+def test_wordcount_hints():
+    report = analyze_application(build_wordcount_app())
+    got = report.hints_str("WCJob.run")
+    assert got == {"collections[].texts[].stats", "collections[].texts[].chunks[]"}
+
+
+def test_kmeans_hints_and_rop_has_nothing():
+    app = build_kmeans_app()
+    report = analyze_application(app)
+    assert report.hints_str("KMeansJob.run") == {"collections[].vectors[]"}
+    # Figure 14's explanation: the KMeans model has no single associations.
+    for cls in app.classes:
+        assert rop_hints(app, cls, 5) == ()
+
+
+def test_pga_dfs_vs_bellman_ford_hints():
+    """DFS exposes the vertex/edge collections to the analysis; Bellman-Ford's
+    worklist traversal exposes nothing (the paper's 7.2.4 contrast)."""
+    report = analyze_application(build_pga_app())
+    dfs = report.hints_str("WeightedDirectedGraph.dfs")
+    assert dfs == {"vertices[].edges[].toVertex"}
+    bf = report.hints_str("WeightedDirectedGraph.bellmanFord")
+    assert bf == set()
+
+
+def test_oo7_hints_respect_override_exclusion():
+    """sub.traverse() is polymorphic (ComplexAssembly/BaseAssembly override
+    Assembly.traverse), so t1's static hints stop at the first assembly level;
+    BaseAssembly.traverse keeps its own hints (it is invoked dynamically, so
+    no static caller dedups them) — each level prefetches at runtime."""
+    report = analyze_application(build_oo7_app())
+    t1 = report.hints_str("OO7Bench.t1")
+    assert t1 == {"module.designRoot.subAssemblies[]"}
+    base = report.hints_str("BaseAssembly.traverse")
+    assert "components[].documentation" in base
+    assert "components[].rootPart.to[].toPart" in base
+
+
+# ---------------------------------------------------------------------------
+# Execution correctness against oracles
+# ---------------------------------------------------------------------------
+
+
+def _client(app):
+    c = POSClient(n_services=4, latency=ZERO)
+    c.register(app)
+    return c
+
+
+@pytest.mark.parametrize("mode", [None, "capre", ("rop", 2)])
+def test_wordcount_result_matches_oracle(mode):
+    c = _client(build_wordcount_app())
+    root = populate_wordcount(c.store, chunks_per_text=8, words_per_chunk=16)
+    kwargs = {"mode": mode} if not isinstance(mode, tuple) else {"mode": mode[0], "rop_depth": mode[1]}
+    with c.session("wordcount", **kwargs) as s:
+        got = s.execute(root, "run")
+        assert s.drain(10.0)
+    # oracle: count every word in the store directly
+    expect = Counter()
+    for tc in c.store.peek(root).fields["collections"]:
+        for t in c.store.peek(tc).fields["texts"]:
+            for ch in c.store.peek(t).fields["chunks"]:
+                expect.update(c.store.peek(ch).fields["words"])
+    assert got == expect
+
+
+def test_kmeans_result_matches_oracle():
+    c = _client(build_kmeans_app())
+    root = populate_kmeans(c.store, n_vectors=80, dims=4)
+    cents = initial_centroids(k=4, dims=4)
+    with c.session("kmeans", mode="capre") as s:
+        got = s.execute(root, "run", [list(x) for x in cents])
+        assert s.drain(10.0)
+
+    # oracle: run the same lloyd iterations in pure python
+    vectors = []
+    for vc in c.store.peek(root).fields["collections"]:
+        for v in c.store.peek(vc).fields["vectors"]:
+            vectors.append(c.store.peek(v).fields["dims"])
+    ref = [list(x) for x in cents]
+    for _ in range(c.store.peek(root).fields["iters"]):
+        sums = [[0.0] * 4 for _ in range(4)]
+        counts = [0] * 4
+        for dims in vectors:
+            cl = _nearest(dims, ref)
+            sums[cl] = [a + b for a, b in zip(sums[cl], dims)]
+            counts[cl] += 1
+        ref = [
+            [s / counts[i] for s in sums[i]] if counts[i] else ref[i] for i in range(4)
+        ]
+    for a, b in zip(got, ref):
+        assert a == pytest.approx(b)
+
+
+def test_pga_bellman_ford_matches_oracle():
+    c = _client(build_pga_app())
+    g, src = populate_pga(c.store, n_vertices=60, out_degree=3)
+    with c.session("pga", mode="capre") as s:
+        from repro.pos.interp import ObjRef
+
+        dist = s.execute(g, "bellmanFord", ObjRef(src))
+        assert s.drain(10.0)
+
+    # oracle: dijkstra-ish relaxation in pure python (non-negative weights)
+    import heapq
+
+    adj: dict[int, list[tuple[int, float]]] = {}
+    for v in c.store.peek(g).fields["vertices"]:
+        edges = []
+        for e in c.store.peek(v).fields["edges"]:
+            rec = c.store.peek(e)
+            edges.append((rec.fields["toVertex"], rec.fields["weight"]))
+        adj[v] = edges
+    ref = {src: 0.0}
+    pq = [(0.0, src)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > ref.get(u, float("inf")):
+            continue
+        for v, w in adj[u]:
+            nd = d + w
+            if nd < ref.get(v, float("inf")):
+                ref[v] = nd
+                heapq.heappush(pq, (nd, v))
+    got = {k.oid: v for k, v in dist.items()}
+    assert got.keys() == ref.keys()
+    for k in ref:
+        assert got[k] == pytest.approx(ref[k])
+
+
+def test_pga_dfs_visits_everything_once():
+    c = _client(build_pga_app())
+    g, _ = populate_pga(c.store, n_vertices=50, out_degree=3)
+    with c.session("pga") as s:
+        total = s.execute(g, "dfs")
+    # every edge weight counted exactly once on the DFS tree? No — DFS sums
+    # w for each edge scanned (all edges) plus subtree sums; just check the
+    # graph was fully visited:
+    verts = set(c.store.peek(g).fields["vertices"])
+    assert verts <= c.store.accessed_oids
+    assert total > 0
+
+
+def test_oo7_t1_visits_all_atomic_parts():
+    c = _client(build_oo7_app())
+    root = populate_oo7(c.store, size="small")
+    with c.session("oo7", mode="capre") as s:
+        s.execute(root, "t1")
+        assert s.drain(20.0)
+    atomic = {
+        oid
+        for ds in c.store.services
+        for oid, rec in ds.disk.items()
+        if rec.cls == "AtomicPart"
+    }
+    assert atomic <= c.store.accessed_oids
+
+
+def test_oo7_t2b_write_counts():
+    c = _client(build_oo7_app())
+    root = populate_oo7(c.store, size="small")
+    with c.session("oo7") as s:
+        s.execute(root, "t2b")
+    atomic_count = sum(
+        1 for ds in c.store.services for rec in ds.disk.values() if rec.cls == "AtomicPart"
+    )
+    # two SetField per updatePart
+    assert c.store.metrics.writes == 2 * atomic_count
+
+
+def test_kmeans_capre_recall_perfect():
+    c = _client(build_kmeans_app())
+    root = populate_kmeans(c.store, n_vectors=100, dims=4)
+    with c.session("kmeans", mode="capre") as s:
+        s.execute(root, "run", initial_centroids(k=4, dims=4))
+        assert s.drain(10.0)
+    acc = c.store.prefetch_accuracy()
+    assert acc["recall"] >= 0.99
+    assert acc["false_positives"] == 0

@@ -1,0 +1,138 @@
+"""Fidelity tests against the paper's running example (Listing 1, Figures 2-3,
+and the PH_m set printed in section 4.3)."""
+
+import pytest
+
+from repro.apps.bank import build_bank_app
+from repro.core import lang
+from repro.core.hints import analyze_application
+from repro.core.lower import lower_method
+from repro.core.rop import rop_hints
+from repro.core.type_graph import (
+    CAPreAnalysis,
+    EXCLUDE_BRANCH_DEPENDENT,
+    INCLUDE_BRANCH_DEPENDENT,
+)
+
+
+@pytest.fixture(scope="module")
+def app():
+    return build_bank_app()
+
+
+def test_application_type_graph_matches_figure_2a(app):
+    """Section 4.2.1 example associations of G_T."""
+    assoc = app.type_graph()
+    assert assoc[("BankManagement", "transactions")] == ("Transaction", lang.COLLECTION)
+    assert assoc[("Transaction", "account")] == ("Account", lang.SINGLE)
+    assert assoc[("Employee", "dept")] == ("Department", lang.SINGLE)
+    assert assoc[("Account", "cust")] == ("Customer", lang.SINGLE)
+    assert assoc[("Customer", "company")] == ("Company", lang.SINGLE)
+    assert ("TransactionType", "typeID") not in assoc  # primitive: not in G_T
+
+
+def test_ir_of_setalltranscustomers_matches_listing_2(app):
+    """The lowered IR follows the Listing 2 pattern: getfield transactions,
+    iterator(), hasNext(), conditional branch, next(), getAccount(),
+    getfield manager, setCustomer(), goto."""
+    mir = lower_method(app, app.method("BankManagement", "setAllTransCustomers"))
+    kinds = [i.itype for i in mir.instrs]
+    assert kinds == [
+        "getfield",  # v2 = getfield transactions : v1
+        "iterator",  # v3 = iterator() : v2
+        "hasnext",  # v4 = hasNext() : v3
+        "conditionalbranch",
+        "next",  # v5 = next() : v3
+        "invokemethod",  # v6 = getAccount() : v5
+        "getfield",  # v7 = getfield manager : v1
+        "invokemethod",  # setCustomer() : v6, v7
+        "goto",
+    ]
+    nxt = mir.instrs[4]
+    assert nxt.has_loop_parent and not nxt.has_conditional_parent
+    inv = mir.instrs[7]
+    assert inv.used_vars == ("v6", "v7")
+
+
+def test_getaccount_branch_dependence_matches_figure_2b(app):
+    """In getAccount(): `type` is navigated in the condition (never branch
+    dependent); `emp` is navigated in BOTH branches (the paper's observation
+    that such navigations are effectively branch-independent); `emp.dept`
+    only in the else branch (branch-dependent, orange in Fig. 2b);
+    `account` is the returned navigation."""
+    analysis = CAPreAnalysis(app)
+    g = analysis.graph_of("Transaction.getAccount")
+    root = g.this_root
+    assert set(root.children) == {"type", "emp", "account"}
+    assert not root.children["type"].branch_dependent
+    assert not root.children["emp"].branch_dependent
+    dept = root.children["emp"].children["dept"]
+    assert dept.branch_dependent
+    assert root.children["account"].is_return
+
+
+def test_ph_m_exclude_policy_matches_paper_section_4_3(app):
+    """The PH_m printed in section 4.3:
+    {transactions.type, transactions.emp, transactions.account.cust.company,
+     manager.company} — reproduced exactly under the conservative policy
+    (the printed set omits the branch-dependent emp.dept)."""
+    report = analyze_application(app, policy=EXCLUDE_BRANCH_DEPENDENT)
+    got = report.hints_str("BankManagement.setAllTransCustomers")
+    assert got == {
+        "transactions[].type",
+        "transactions[].emp",
+        "transactions[].account.cust.company",
+        "manager.company",
+    }
+
+
+def test_ph_m_include_policy_adds_branch_dependent_dept(app):
+    """CAPre's implementation choice (section 4.4): include branch-dependent
+    navigations — the union of both branches adds transactions[].emp.dept."""
+    report = analyze_application(app, policy=INCLUDE_BRANCH_DEPENDENT)
+    got = report.hints_str("BankManagement.setAllTransCustomers")
+    assert got == {
+        "transactions[].type",
+        "transactions[].emp.dept",
+        "transactions[].account.cust.company",
+        "manager.company",
+    }
+
+
+def test_caller_dedup_empties_invoked_methods(app):
+    """Section 5.1.3: hints found in all callers are removed — getAccount and
+    setCustomer are only invoked by setAllTransCustomers, which already
+    prefetches everything they would."""
+    report = analyze_application(app)
+    assert report.full_hints_str("Transaction.getAccount") != set()
+    assert report.hints_str("Transaction.getAccount") == set()
+    assert report.hints_str("Account.setCustomer") == set()
+    # the entry method keeps its hints
+    assert report.hints_str("BankManagement.setAllTransCustomers") != set()
+
+
+def test_rop_hints_depth_expansion(app):
+    """Section 3: ROP with depth 1 on Transaction predicts TransactionType,
+    Account and Employee; depth 2 adds Department and Customer; collections
+    are never predicted."""
+    d1 = {str(h) for h in rop_hints(app, "Transaction", 1)}
+    assert d1 == {"type", "account", "emp"}
+    d2 = {str(h) for h in rop_hints(app, "Transaction", 2)}
+    assert d2 == {"type", "account.cust", "emp.dept"}
+    d3 = {str(h) for h in rop_hints(app, "Transaction", 3)}
+    assert d3 == {"type", "account.cust.company", "emp.dept"}
+    # ROP on BankManagement never predicts the transactions collection
+    bm = {str(h) for h in rop_hints(app, "BankManagement", 5)}
+    assert all("transactions" not in h for h in bm)
+    assert "manager.company" in bm
+
+
+def test_no_branch_dependent_stats(app):
+    report = analyze_application(app)
+    s = report.stats
+    assert s.n_methods == 6
+    # getAccount triggers a branch-dependent navigation (emp.dept), and the
+    # augmented graph of setAllTransCustomers inherits it — for both, the
+    # predicted set is inexact (Fig. 5b counts exactly this property).
+    assert s.n_methods_no_bd == 4
+    assert s.n_conditionals >= 2

@@ -1,0 +1,40 @@
+"""Example-rot guard: every example in examples/ must run end to end
+(reduced sizes via CLI args where available)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(script: str, *args: str, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script), *args],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, f"{script} failed:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_quickstart_runs_and_shows_hints():
+    out = _run("quickstart.py")
+    assert "PH[BankManagement.setAllTransCustomers]" in out
+    assert "transactions[].account.cust.company" in out
+    assert "capre" in out
+
+
+def test_train_lm_reduces_loss_and_resumes():
+    out = _run("train_lm.py", "--steps", "30", "--batch", "4", "--seq", "64")
+    assert "loss:" in out and "resume check: restored step" in out
+
+
+def test_serve_lm_generates_and_streams():
+    out = _run("serve_lm.py")
+    assert "access plan" in out
+    assert "prefetch_hits" in out

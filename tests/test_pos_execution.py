@@ -1,0 +1,109 @@
+"""Integration tests: the bank application executing in the distributed POS
+under the three prefetching modes (none / CAPre / ROP)."""
+
+import time
+
+import pytest
+
+from repro.apps.bank import build_bank_app, populate_bank_store
+from repro.pos.client import POSClient
+from repro.pos.latency import ZERO, LatencyModel
+
+
+@pytest.fixture()
+def client():
+    c = POSClient(n_services=4, latency=ZERO)
+    c.register(build_bank_app())
+    return c
+
+
+def _run(client, mode=None, rop_depth=1, n_tx=60):
+    root = populate_bank_store(client.store, n_transactions=n_tx)
+    with client.session("bank", mode=mode, rop_depth=rop_depth) as s:
+        s.execute(root, "setAllTransCustomers")
+        assert s.drain(10.0)
+    return root
+
+
+def test_execution_semantics_updates_customers(client):
+    """setAllTransCustomers sets the account's customer to the manager, but
+    only for customers of the same company (the Listing 1 security check)."""
+    root = _run(client, mode=None)
+    store = client.store
+    mgr = store.peek(root).fields["manager"]
+    mgr_co = store.peek(mgr).fields["company"]
+    for tx in store.peek(root).fields["transactions"]:
+        acct = store.peek(store.peek(tx).fields["account"])
+        cust = store.peek(acct.fields["cust"])
+        if cust.fields["company"] == mgr_co:
+            assert acct.fields["cust"] == mgr or cust.fields["name"] == "manager"
+
+
+def test_capre_prefetch_covers_accessed_objects(client):
+    """On the read-only traversal, CAPre predicts every object the
+    application navigates (perfect recall, modulo the root it starts from)."""
+    root = populate_bank_store(client.store, n_transactions=60)
+    with client.session("bank", mode="capre") as s:
+        s.execute(root, "auditAll")
+        assert s.drain(10.0)
+    accessed = client.store.accessed_oids - {root}
+    prefetched = client.store.prefetched_oids
+    missing = accessed - prefetched
+    assert not missing, f"CAPre failed to predict {len(missing)} accessed objects"
+    acc = client.store.prefetch_accuracy()
+    assert acc["recall"] >= 0.99
+
+
+def test_capre_prefetch_on_mutating_traversal_still_high_recall(client):
+    """setAllTransCustomers mutates account.cust while the prefetcher runs;
+    objects replaced before the prefetcher reaches them may be missed, but
+    coverage stays high and every miss is a Customer that was swapped out."""
+    root = _run(client, mode="capre")
+    missing = (client.store.accessed_oids - {root}) - client.store.prefetched_oids
+    assert all(client.store.cls_of(o) == "Customer" for o in missing)
+
+
+def test_rop_never_prefetches_collections(client):
+    """ROP only follows single associations: the Transaction objects (reached
+    through the transactions collection) are never prefetched by ROP."""
+    root = _run(client, mode="rop", rop_depth=5)
+    store = client.store
+    tx_oids = set(store.peek(root).fields["transactions"])
+    assert not (store.prefetched_oids & tx_oids)
+
+
+def test_rop_depth_increases_coverage(client):
+    r1 = _run(client, mode="rop", rop_depth=1)
+    cov1 = len(client.store.prefetched_oids)
+    client.store.reset_runtime_state()
+    with client.session("bank", mode="rop", rop_depth=3) as s:
+        s.execute(r1, "setAllTransCustomers")
+        assert s.drain(10.0)
+    cov3 = len(client.store.prefetched_oids)
+    assert cov3 >= cov1
+
+
+def test_capre_wall_clock_beats_no_prefetch():
+    """With realistic latencies, CAPre's parallel prefetching reduces the
+    execution time of the collection-heavy traversal (paper section 7.2)."""
+    lat = LatencyModel(disk_load=400e-6, remote_hop=80e-6, write_back=200e-6, think=80e-6)
+    times = {}
+    for mode in (None, "capre"):
+        client = POSClient(n_services=4, latency=lat)
+        client.register(build_bank_app())
+        root = populate_bank_store(client.store, n_transactions=150)
+        with client.session("bank", mode=mode, parallel_workers=16) as s:
+            t0 = time.perf_counter()
+            s.execute(root, "setAllTransCustomers")
+            times[mode] = time.perf_counter() - t0
+            s.drain(10.0)
+    assert times["capre"] < times[None], f"capre {times['capre']:.3f}s !< none {times[None]:.3f}s"
+
+
+def test_metrics_accounting(client):
+    _run(client, mode=None, n_tx=20)
+    m = client.store.metrics
+    assert m.app_loads > 0
+    assert m.app_cache_misses > 0
+    assert m.prefetch_loads == 0  # no prefetching configured
+    assert m.writes > 0  # the setCustomer updates

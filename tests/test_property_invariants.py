@@ -1,0 +1,132 @@
+"""Hypothesis property tests on the system's invariants.
+
+CAPre core (over randomly generated applications):
+  * the analysis always terminates and never crashes (recursion/cycles/
+    overrides included);
+  * every generated hint is a valid navigation path through the
+    application type graph G_T (schema soundness);
+  * conservative (exclude) hints reach only objects the include policy also
+    reaches;
+  * caller-deduplicated hints are a subset of the full hints.
+
+Sharding rules (over every assigned architecture × shape × layout):
+  * every parameter's PartitionSpec divides its dimensions exactly.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core import lang
+from repro.core.corpus import generate_app
+from repro.core.hints import analyze_application, method_paths
+from repro.core.type_graph import EXCLUDE_BRANCH_DEPENDENT, INCLUDE_BRANCH_DEPENDENT
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_classes=st.integers(2, 12),
+    mpc=st.integers(1, 4),
+)
+def test_analysis_terminates_and_hints_are_schema_valid(seed, n_classes, mpc):
+    app = generate_app(seed, n_classes=n_classes, methods_per_class=mpc)
+    report = analyze_application(app)
+    assoc = app.type_graph()
+    # walkable: every hint follows associations declared in G_T
+    by_owner = {}
+    for (owner, fld), (target, card) in assoc.items():
+        by_owner.setdefault(owner, {})[fld] = (target, card)
+
+    def owner_chain_ok(start_cls, steps):
+        cur = start_cls
+        for fld, card in steps:
+            fields = {}
+            t = cur
+            while t is not None:  # include supertype fields
+                fields.update(by_owner.get(t, {}))
+                t = app.classes[t].supertype if t in app.classes else None
+            assert fld in fields, f"hint step {fld} not a field of {cur}"
+            target, decl_card = fields[fld]
+            assert card == decl_card
+            cur = target
+
+    for key, hints in report.full_hints.items():
+        owner = key.split(".")[0]
+        for h in hints:
+            owner_chain_ok(owner, h.steps)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exclude_policy_paths_subset_of_include(seed):
+    app = generate_app(seed, n_classes=6, methods_per_class=3)
+    from repro.core.type_graph import CAPreAnalysis
+
+    analysis = CAPreAnalysis(app)
+    graphs = analysis.analyze_all()
+    for g in graphs.values():
+        excl = method_paths(g, EXCLUDE_BRANCH_DEPENDENT)
+        incl = method_paths(g, INCLUDE_BRANCH_DEPENDENT)
+        assert excl <= incl
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dedup_hints_subset_of_full(seed):
+    app = generate_app(seed, n_classes=8, methods_per_class=3)
+    report = analyze_application(app)
+    for key in report.hints:
+        assert set(report.hints[key]) <= set(report.full_hints[key])
+
+
+# ---------------------------------------------------------------------------
+# Sharding-rule validity across the whole assignment matrix
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    """Shape-only stand-in (no devices needed for divisibility checks)."""
+
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = int(np.prod(list(shape.values())))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_shape", [
+    {"data": 16, "model": 16},
+    {"pod": 2, "data": 16, "model": 16},
+])
+@pytest.mark.parametrize("parallelism", ["tp", "fsdp"])
+def test_param_shardings_divide_exactly(arch, mesh_shape, parallelism):
+    from repro.launch.shardings import logical_rules
+    from repro.models.model import Model
+
+    cfg = get_config(arch).replace(parallelism=parallelism)
+    mesh = _FakeMesh(mesh_shape)
+    model = Model(cfg)
+    for shape_cfg in SHAPES.values():
+        if shape_cfg.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            continue
+        rules = logical_rules(cfg, shape_cfg, mesh)
+        pspecs = model.param_pspecs(rules)
+        abstract = model.abstract_params()
+        flat_s = jax.tree.leaves(
+            pspecs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or x.__class__.__name__ == "PartitionSpec"
+        )
+        flat_a = jax.tree.leaves(abstract)
+        assert len(flat_s) == len(flat_a)
+        for spec, aval in zip(flat_s, flat_a):
+            for dim, entry in zip(aval.shape, tuple(spec)):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n = int(np.prod([mesh.shape[a] for a in axes]))
+                assert dim % n == 0, (
+                    f"{arch}/{parallelism}/{shape_cfg.name}: dim {dim} "
+                    f"not divisible by {axes} ({n}) in spec {spec}"
+                )
