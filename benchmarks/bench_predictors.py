@@ -1,0 +1,100 @@
+"""End-to-end comparison of every registered prefetch predictor: wall-clock
+execution time + live prefetch accuracy + predictor overhead, on the paper
+benchmark apps (the companion to the offline replay tables of
+``repro.predict.evaluate``).
+
+For each (app, mode): a fresh store is populated, one *monitoring run*
+records the access trace with prefetching off (the warm-up a trace-mined
+predictor needs — its cost is what CAPre's zero-monitoring story avoids),
+then ``reps`` cold-cache repetitions run with the mode's predictor live.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_predictors [--fast]
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.pos.client import POSClient
+from repro.predict.evaluate import _catalog
+
+from .common import BENCH_LATENCY, BenchResult, print_results
+
+PREDICTOR_MODES = (
+    ("none", None),
+    ("rop_d2", "rop"),
+    ("capre", "capre"),
+    ("markov", "markov-miner"),
+    ("hybrid", "hybrid"),
+)
+
+
+def run(reps: int = 3, apps=("bank", "wordcount", "kmeans"), modes=PREDICTOR_MODES,
+        n_services: int = 4, parallel_workers: int = 16) -> list[BenchResult]:
+    catalog = _catalog()
+    results: list[BenchResult] = []
+    for app_name in apps:
+        wl = catalog[app_name]
+        for mode_name, mode in modes:
+            client = POSClient(n_services=n_services, latency=BENCH_LATENCY)
+            client.register(wl.build_app())
+            root = wl.populate(client.store)
+            # monitoring run: record the trace the miners train on
+            warm_trace = None
+            if mode in ("markov-miner", "hybrid"):
+                client.store.trace = []
+                with client.session(wl.name, mode=None) as s:
+                    wl.run_once(s, root)
+                warm_trace = list(client.store.trace)
+                client.store.trace = None
+            times, metrics = [], {}
+            for _ in range(reps):
+                client.store.reset_runtime_state()
+                with client.session(
+                    wl.name,
+                    mode=mode,
+                    rop_depth=2,
+                    parallel_workers=parallel_workers,
+                    warm_trace=warm_trace,
+                ) as s:
+                    t0 = time.perf_counter()
+                    wl.run_once(s, root)
+                    times.append(time.perf_counter() - t0)
+                    s.drain(30.0)
+                    metrics = client.store.metrics.snapshot()
+                    metrics.update(client.store.prefetch_accuracy())
+                    if s.predictor is not None:
+                        metrics.update(s.predictor.overhead.snapshot())
+            results.append(
+                BenchResult(
+                    benchmark=f"predictors_{app_name}",
+                    config=wl.workload,
+                    mode=mode_name,
+                    mean_s=statistics.mean(times),
+                    stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
+                    reps=reps,
+                    metrics=metrics,
+                )
+            )
+    return results
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    apps = ("bank",) if args.fast else ("bank", "wordcount", "kmeans")
+    results = run(reps=args.reps, apps=apps)
+    print("name,us_per_call,derived")
+    print_results(results)
+    for r in results:
+        acc = {k: r.metrics.get(k) for k in ("precision", "recall", "table_bytes", "monitor_events")}
+        print(f"# {r.benchmark}/{r.mode}: {acc}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,9 @@ Sections:
   * branch-dep corpus — Table 2
   * streaming         — the TPU adaptation (CAPre-plan vs ROP-depth weight
                         streaming; see benchmarks/bench_streaming.py)
+  * predictors        — every registered prediction strategy head-to-head
+                        (static / schema / trace-mined / hybrid; see
+                        benchmarks/bench_predictors.py)
 
 Environment: REPRO_BENCH_REPS (default 3), REPRO_BENCH_FAST=1 shrinks sizes.
 """
@@ -35,6 +38,12 @@ def main() -> None:
     results += bench_wordcount.run(reps=reps, chunk_sweep=(16, 64) if fast else (16, 64, 256))
     results += bench_kmeans.run(reps=reps, sizes=(400,) if fast else (400, 1200))
     results += bench_pga.run(reps=reps, n_vertices=200 if fast else 400)
+
+    from . import bench_predictors
+
+    results += bench_predictors.run(
+        reps=reps, apps=("bank",) if fast else ("bank", "wordcount", "kmeans")
+    )
     print_results(results)
     sys.stdout.flush()
 

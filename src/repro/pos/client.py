@@ -3,14 +3,17 @@
 Application classes are registered with the Logic Module; CAPre intercepts
 the registration, runs the static analysis, and generates + injects the
 prefetching methods.  A ``Session`` then executes registered methods against
-the store under one of three prefetching modes:
+the store under a prefetching mode resolved through the ``repro.predict``
+registry:
 
-  * ``None``      — no prefetching (the paper's baseline),
-  * ``"capre"``   — hint-driven prefetching (this paper),
-  * ``"rop"``     — Referenced-Objects Predictor at a configurable fetch
-                    depth: every application-path cache miss eagerly schedules
-                    the object's referenced single associations (never
-                    collections) up to ``rop_depth`` levels.
+  * ``None``           — no prefetching (the paper's baseline),
+  * ``"capre"``        — hint-driven prefetching (this paper),
+  * ``"rop"``          — Referenced-Objects Predictor at a configurable
+                         fetch depth (schema-based baseline),
+  * ``"markov-miner"`` — order-k trace mining (monitoring-based baseline),
+  * ``"hybrid"``       — static collections + mined single chains,
+
+plus anything else registered via ``repro.predict.register``.
 """
 
 from __future__ import annotations
@@ -23,7 +26,6 @@ from repro.core import lang
 from repro.core.hints import AnalysisReport, analyze_application
 from repro.core.injection import generate_all
 from repro.core.lower import lower_application
-from repro.core.rop import rop_referenced_fields
 from repro.core.type_graph import INCLUDE_BRANCH_DEPENDENT
 
 from .executor import PrefetchRuntime
@@ -68,9 +70,16 @@ class LogicModule:
 
 @dataclass
 class SessionConfig:
-    mode: Optional[str] = None  # None | "capre" | "rop"
+    mode: Optional[str] = None  # None or any repro.predict registry name
     rop_depth: int = 1
     parallel_workers: int = 8
+    # trace-mined predictors (markov-miner / hybrid)
+    markov_order: int = 2
+    markov_confidence: float = 0.25
+    markov_table_capacity: int = 65536
+    markov_fanout: int = 8
+    markov_chain: int = 4
+    warm_trace: Optional[list] = None  # recorded ObjectStore.trace to mine
 
 
 class Session:
@@ -80,56 +89,20 @@ class Session:
         self.app = reg.app
         self.config = config or SessionConfig()
         self.runtime = PrefetchRuntime(parallel_workers=self.config.parallel_workers)
-        self._rop_fields: dict[str, list[tuple[str, str]]] = {}
-        self._rop_issued: set[int] = set()
-        if self.config.mode == "rop":
-            for cls in self.app.classes:
-                self._rop_fields[cls] = rop_referenced_fields(self.app, cls)
-            store_self = self
+        self.store.miss_listener = None
+        self.store.access_listener = None
+        self.predictor = None
+        if self.config.mode is not None:
+            from repro import predict
 
-            def _on_miss(oid: int) -> None:
-                store_self._rop_trigger(oid)
+            self.predictor = predict.make_pos_predictor(self.config.mode, config=self.config)
+            self.predictor.bind(self)
 
-            self.store.miss_listener = _on_miss
-        else:
-            self.store.miss_listener = None
-
-    # -- injected prefetch scheduling (CAPre) ---------------------------------
+    # -- injected prefetch scheduling (the paper's Listing 5 hook) -----------
 
     def on_method_entry(self, method_key: str, this_oid: int) -> None:
-        if self.config.mode != "capre":
-            return
-        fn = self.reg.prefetch_methods.get(method_key)
-        if fn is None:
-            return
-        self.runtime.schedule(lambda: fn(self.store, self.runtime, this_oid))
-
-    # -- ROP eager fetch -------------------------------------------------------
-
-    def _rop_trigger(self, oid: int) -> None:
-        if oid in self._rop_issued:
-            return
-        self._rop_issued.add(oid)
-        depth = self.config.rop_depth
-        store = self.store
-
-        def bfs(root_oid: int) -> None:
-            frontier = [root_oid]
-            for _ in range(depth):
-                nxt: list[int] = []
-                for o in frontier:
-                    rec = store.record(o)
-                    for fld, _target in self._rop_fields.get(rec.cls, ()):
-                        ref = rec.fields.get(fld)
-                        if ref is None:
-                            continue
-                        store.prefetch_access(ref)
-                        nxt.append(ref)
-                frontier = nxt
-                if not frontier:
-                    break
-
-        self.runtime.fan_out(bfs, [oid])
+        if self.predictor is not None:
+            self.predictor.on_method_entry(method_key, this_oid)
 
     # -- execution ---------------------------------------------------------------
 
@@ -141,7 +114,10 @@ class Session:
         return self.runtime.drain(timeout)
 
     def close(self) -> None:
+        if self.predictor is not None:
+            self.predictor.unbind()
         self.store.miss_listener = None
+        self.store.access_listener = None
         self.runtime.shutdown()
 
     def __enter__(self):
@@ -164,6 +140,9 @@ class POSClient:
     def register(self, app: lang.Application, policy: str = INCLUDE_BRANCH_DEPENDENT) -> RegisteredApp:
         return self.logic_module.register(app, policy)
 
-    def session(self, app_name: str, mode: Optional[str] = None, rop_depth: int = 1, parallel_workers: int = 8) -> Session:
+    def session(self, app_name: str, mode: Optional[str] = None, rop_depth: int = 1,
+                parallel_workers: int = 8, **overrides) -> Session:
         reg = self.logic_module.registered[app_name]
-        return Session(self.store, reg, SessionConfig(mode=mode, rop_depth=rop_depth, parallel_workers=parallel_workers))
+        cfg = SessionConfig(mode=mode, rop_depth=rop_depth,
+                            parallel_workers=parallel_workers, **overrides)
+        return Session(self.store, reg, cfg)

@@ -65,27 +65,40 @@ class DataService:
     def load_into_memory(self, oid: int) -> bool:
         """Disk -> memory. Returns True if this call performed the disk load
         (False: cached, or coalesced onto an in-flight load)."""
-        with self._cache_lock:
-            if oid in self.cache:
-                self._touch(oid)
-                return False
-            ev = self._inflight.get(oid)
-            if ev is None:
-                ev = threading.Event()
-                self._inflight[oid] = ev
-                owner = True
-            else:
-                owner = False
-        if not owner:
+        while True:
+            with self._cache_lock:
+                if oid in self.cache:
+                    self._touch(oid)
+                    return False
+                ev = self._inflight.get(oid)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[oid] = ev
+                    owner = True
+                else:
+                    owner = False
+            if owner:
+                break
             ev.wait(timeout=5.0)
-            return False
+            # Re-check instead of assuming the load landed: the owner may
+            # have timed out / been dropped (drop_cache wakes waiters with
+            # nothing loaded).  A completed load still needs the LRU bump
+            # this waiter's access deserves — both handled by looping back
+            # to the cache check, which touches on hit and otherwise
+            # performs (or re-coalesces onto) a fresh load.
+            with self._cache_lock:
+                if oid not in self.cache and self._inflight.get(oid) is ev and ev.is_set():
+                    # the owner signalled but never landed the load: clear
+                    # the stale entry so the next pass can take ownership
+                    self._inflight.pop(oid, None)
         try:
             with self._slots:
                 self.latency.sleep(self.latency.disk_load)
             with self._cache_lock:
                 self._touch(oid)
-                self._inflight.pop(oid, None)
         finally:
+            with self._cache_lock:
+                self._inflight.pop(oid, None)
             ev.set()
         return True
 
@@ -99,6 +112,24 @@ class DataService:
             for ev in self._inflight.values():
                 ev.set()
             self._inflight.clear()
+
+
+def prefetch_accuracy(prefetched: set, accessed: set) -> dict[str, float]:
+    """Set-based precision/recall of a prefetcher — shared between the live
+    store accounting and the offline trace-replay harness
+    (``predict.evaluate``), so both report identical definitions."""
+    tp = len(prefetched & accessed)
+    fp = len(prefetched - accessed)
+    fn = len(accessed - prefetched)
+    denom_p = max(1, tp + fp)
+    denom_r = max(1, tp + fn)
+    return {
+        "true_positives": tp,
+        "false_positives": fp,
+        "false_negatives": fn,
+        "precision": tp / denom_p,
+        "recall": tp / denom_r,
+    }
 
 
 @dataclass
@@ -145,6 +176,9 @@ class ObjectStore:
         # optional callback fired on every application-path cache miss —
         # how the ROP baseline hooks its eager referenced-object fetch
         self.miss_listener = None
+        # optional callback fired on EVERY application-path access (hit or
+        # miss) — the monitoring hook the trace-mined predictors pay for
+        self.access_listener = None
 
     # -- placement ---------------------------------------------------------
 
@@ -194,6 +228,8 @@ class ObjectStore:
                 self.trace.append(oid)
         if did_load and self.miss_listener is not None:
             self.miss_listener(oid)
+        if self.access_listener is not None:
+            self.access_listener(oid)
         self.latency.sleep(self.latency.think)
         return ds.disk[oid]
 
@@ -239,18 +275,7 @@ class ObjectStore:
     def prefetch_accuracy(self) -> dict[str, float]:
         """True positives: prefetched & accessed. False positives: prefetched
         but never accessed. False negatives: accessed but never prefetched."""
-        tp = len(self.prefetched_oids & self.accessed_oids)
-        fp = len(self.prefetched_oids - self.accessed_oids)
-        fn = len(self.accessed_oids - self.prefetched_oids)
-        denom_p = max(1, tp + fp)
-        denom_r = max(1, tp + fn)
-        return {
-            "true_positives": tp,
-            "false_positives": fp,
-            "false_negatives": fn,
-            "precision": tp / denom_p,
-            "recall": tp / denom_r,
-        }
+        return prefetch_accuracy(self.prefetched_oids, self.accessed_oids)
 
     def populate_collection(self, cls: str, payloads: Iterable[dict[str, Any]]) -> list[int]:
         """Store many objects of one class round-robin across Data Services

@@ -1,0 +1,138 @@
+"""The unified prediction interface (DESIGN.md section 3).
+
+CAPre's argument (paper sections 1-2) is a three-way comparison:
+
+  * **schema-based** prediction (ROP) — cheap but rigid: the same expansion
+    regardless of the running code;
+  * **monitoring-based** prediction (Palpatine-style sequence mining) —
+    adaptive but pays a *runtime overhead*: every access is observed, and
+    the mined tables occupy memory;
+  * **code-analysis-based** prediction (CAPre) — derived entirely at
+    registration time, zero runtime monitoring.
+
+The repo originally hard-wired the first and third into ``pos.client`` and
+``runtime.prefetch``; this module defines the common ``Predictor`` surface
+that all strategies implement so they can be compared head-to-head, and an
+``Overhead`` ledger so the memory/CPU cost the paper attributes to the
+monitoring family is *measured*, not asserted.
+
+A predictor serves two hosts:
+
+  * **online** — bound to a live ``pos.client.Session``: it installs the
+    store hooks it needs (``miss_listener`` for ROP, ``access_listener``
+    for the miners) and schedules real ``prefetch_access`` work on the
+    session's background runtime;
+  * **offline** — driven by ``predict.evaluate`` replaying a recorded
+    trace: the same ``on_access``/``on_method_entry`` entry points return
+    the predicted oids instead of scheduling loads, so precision/recall
+    can be computed without a store in the loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence
+
+# Rough per-entry cost of a Python dict slot holding small ints; used to
+# charge mined tables a realistic resident size (the paper's "memory
+# overhead to store data structures of monitored accesses").
+_TABLE_ENTRY_BYTES = 96
+
+
+@dataclass
+class Overhead:
+    """The runtime cost a prediction strategy pays (beyond the prefetch
+    I/O itself, which every strategy pays and the store already meters)."""
+
+    table_bytes: int = 0  # resident size of mined/derived tables
+    monitor_events: int = 0  # accesses observed at runtime (monitoring tax)
+    train_seconds: float = 0.0  # offline mining / analysis wall time
+    predictions: int = 0  # oids emitted (prefetch pressure)
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+def table_bytes(n_entries: int, entry_bytes: int = _TABLE_ENTRY_BYTES) -> int:
+    return n_entries * entry_bytes
+
+
+class Predictor:
+    """Base class for all prefetch predictors.
+
+    Lifecycle: construct -> (optionally) ``warm(trace)`` -> either
+    ``bind(session)`` for online use or plain ``on_*`` calls for offline
+    replay.  Subclasses override the ``on_*`` hooks; both must be
+    side-effect-free when ``self.session is None`` (offline mode) and may
+    schedule real prefetches when bound.
+    """
+
+    #: registry name (set by the @register decorator)
+    name: str = "?"
+
+    def __init__(self) -> None:
+        self.session = None  # live pos.client.Session when bound
+        self.store = None  # ObjectStore (bound or attached for replay)
+        self.reg = None  # pos.client.RegisteredApp (schema + analysis)
+        self.overhead = Overhead()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warm(self, trace: Sequence[int]) -> None:
+        """Consume a recorded access trace (``ObjectStore.trace``) before
+        prediction starts.  Static strategies ignore it; trace miners build
+        their tables here and charge ``overhead.train_seconds`` /
+        ``overhead.table_bytes``."""
+
+    def attach(self, store, reg) -> None:
+        """Give the predictor its schema/analysis context without a live
+        session — what the offline replay harness uses.  Subclasses build
+        their derived structures here."""
+        self.store = store
+        self.reg = reg
+
+    def bind(self, session) -> None:
+        """Attach to a live Session: install whatever store listeners this
+        strategy needs.  The default installs nothing."""
+        self.session = session
+        self.attach(session.store, session.reg)
+
+    def unbind(self) -> None:
+        """Detach from the session (Session.close)."""
+        if self.session is not None:
+            store = self.session.store
+            if store.miss_listener is not None:
+                store.miss_listener = None
+            if store.access_listener is not None:
+                store.access_listener = None
+        self.session = None
+
+    # -- prediction entry points ------------------------------------------
+
+    def on_method_entry(self, method_key: str, this_oid: int) -> list[int]:
+        """Called when the application enters a registered method (the
+        paper's injected scheduling point).  Returns the oids predicted at
+        this point; when bound, also schedules their prefetch."""
+        return []
+
+    def on_access(self, oid: int, cls: str) -> list[int]:
+        """Called on every application-path object access (the monitoring
+        hook).  Returns the oids predicted to be accessed next; when
+        bound, also schedules their prefetch."""
+        return []
+
+    def on_miss(self, oid: int) -> list[int]:
+        """Called on application-path cache misses only (the ROP hook)."""
+        return []
+
+    # -- shared helpers ----------------------------------------------------
+
+    def _emit(self, oids: Iterable[int]) -> list[int]:
+        """Account predictions; when bound, fan their loads out on the
+        session's background runtime."""
+        out = [o for o in oids]
+        self.overhead.predictions += len(out)
+        if out and self.session is not None:
+            store = self.session.store
+            self.session.runtime.fan_out(store.prefetch_access, out)
+        return out

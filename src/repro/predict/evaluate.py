@@ -1,0 +1,318 @@
+"""Offline trace-replay evaluation harness (DESIGN.md section 3.3).
+
+Turns ``ObjectStore.trace`` from a debugging aid into the substrate for a
+head-to-head comparison of every registered predictor:
+
+  1. **record** — run a benchmark workload with prefetching off, capturing
+     the interleaved stream of method entries (the injected scheduling
+     points) and application-path object accesses; two cold-cache runs are
+     recorded so trace miners can train on the first and be scored on the
+     second (the warm-up run a monitoring approach needs anyway);
+  2. **replay** — feed the eval run's events to a fresh instance of each
+     predictor: ``enter`` events drive ``on_method_entry``, ``access``
+     events drive ``on_access`` (cold-cache misses are first accesses);
+     the predicted oid set accumulates with no store I/O in the loop;
+  3. **score** — precision/recall via the same ``prefetch_accuracy``
+     definition the live store uses, plus **coverage** (the fraction of
+     access events whose oid had already been predicted when the access
+     happened — order-aware, unlike set recall) and the predictor's
+     ``Overhead`` ledger (mined-table bytes, monitored events, train
+     time — the costs the paper says the monitoring family pays).
+
+Replay measures *prediction quality*, not I/O timing: a predicted object is
+counted prefetched even if a real prefetch thread might have lost the race.
+``benchmarks/bench_predictors.py`` is the end-to-end wall-clock companion.
+
+Run: ``PYTHONPATH=src python -m repro.predict.evaluate [--fast] [--apps a,b]``
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from repro.pos.client import POSClient, Session, SessionConfig
+from repro.pos.store import prefetch_accuracy
+
+from . import available, make_pos_predictor
+from .base import Predictor
+
+
+# ---------------------------------------------------------------------------
+# recording
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RecordedTrace:
+    """One cold-cache run of a workload: the interleaved event stream plus
+    the plain oid trace (== what ``ObjectStore.trace`` recorded)."""
+
+    app_name: str
+    workload: str
+    events: list[tuple]  # ("enter", method_key, oid) | ("access", oid)
+    accesses: list[int]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class TraceRecorder(Predictor):
+    """A predictor that predicts nothing and writes down everything —
+    plugged into a Session to capture the replayable event stream."""
+
+    def __init__(self):
+        super().__init__()
+        self.events: list[tuple] = []
+
+    def bind(self, session) -> None:
+        super().bind(session)
+        session.store.access_listener = lambda oid: self.events.append(("access", oid))
+
+    def on_method_entry(self, method_key: str, this_oid: int) -> list[int]:
+        self.events.append(("enter", method_key, this_oid))
+        return []
+
+
+@dataclass
+class Workload:
+    """A benchmark app + a traversal to trace, in the same shape the
+    benchmark driver uses (``run_once(session, root)``)."""
+
+    name: str
+    build_app: Callable
+    populate: Callable[[object], int]
+    run_once: Callable[[Session, int], None]
+    workload: str = "run"
+
+
+def _catalog() -> dict[str, Workload]:
+    """The five paper benchmark apps with trace-friendly (small) sizes."""
+    from repro.apps.bank import build_bank_app, populate_bank_store
+    from repro.apps.kmeans import build_kmeans_app, initial_centroids, populate_kmeans
+    from repro.apps.oo7 import build_oo7_app, populate_oo7
+    from repro.apps.pga import build_pga_app, populate_pga
+    from repro.apps.wordcount import build_wordcount_app, populate_wordcount
+
+    cents = [list(c) for c in initial_centroids(k=3, dims=6)]
+    return {
+        "bank": Workload(
+            "bank",
+            build_bank_app,
+            lambda store: populate_bank_store(store, n_transactions=60),
+            lambda s, root: s.execute(root, "auditAll"),
+            workload="auditAll",
+        ),
+        "wordcount": Workload(
+            "wordcount",
+            build_wordcount_app,
+            lambda store: populate_wordcount(store, chunks_per_text=8, words_per_chunk=6),
+            lambda s, root: s.execute(root, "run"),
+        ),
+        "kmeans": Workload(
+            "kmeans",
+            build_kmeans_app,
+            lambda store: populate_kmeans(store, n_vectors=240, n_collections=3, dims=6),
+            lambda s, root: s.execute(root, "run", cents),
+        ),
+        "oo7": Workload(
+            "oo7",
+            build_oo7_app,
+            lambda store: populate_oo7(store, size="small"),
+            lambda s, root: s.execute(root, "t1"),
+            workload="t1",
+        ),
+        "pga": Workload(
+            "pga",
+            build_pga_app,
+            lambda store: _pga_populate(store, populate_pga),
+            lambda s, root: s.execute(root, "dfs"),
+            workload="dfs",
+        ),
+    }
+
+
+def _pga_populate(store, populate_pga) -> int:
+    g, _src = populate_pga(store, n_vertices=120, out_degree=3)
+    return g
+
+
+def record_workload(
+    wl: Workload, runs: int = 2, n_services: int = 4
+) -> tuple[POSClient, int, list[RecordedTrace]]:
+    """Populate a zero-latency store and record ``runs`` cold-cache traces
+    of the workload with prefetching off.  Returns the live client (replay
+    needs the object graph and the registration analysis) plus the traces."""
+    client = POSClient(n_services=n_services)
+    client.register(wl.build_app())
+    root = wl.populate(client.store)
+    traces: list[RecordedTrace] = []
+    for _ in range(runs):
+        client.store.reset_runtime_state()
+        client.store.trace = []
+        session = Session(client.store, client.logic_module.registered[wl.name])
+        recorder = TraceRecorder()
+        recorder.bind(session)
+        session.predictor = recorder
+        try:
+            wl.run_once(session, root)
+        finally:
+            session.close()
+        traces.append(
+            RecordedTrace(
+                app_name=wl.name,
+                workload=wl.workload,
+                events=list(recorder.events),
+                accesses=list(client.store.trace),
+            )
+        )
+        client.store.trace = None
+    return client, root, traces
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplayResult:
+    app: str
+    workload: str
+    predictor: str
+    precision: float
+    recall: float
+    coverage: float
+    true_positives: int
+    false_positives: int
+    false_negatives: int
+    overhead: dict = field(default_factory=dict)
+
+    def row(self) -> dict:
+        out = dict(self.__dict__)
+        out.update(out.pop("overhead"))
+        return out
+
+
+def replay(trace: RecordedTrace, predictor: Predictor, store, reg) -> ReplayResult:
+    """Drive ``predictor`` through the recorded event stream and score the
+    oids it would have prefetched against the oids actually accessed."""
+    predictor.attach(store, reg)
+    predicted: set[int] = set()
+    accessed: set[int] = set()
+    n_access, timely = 0, 0
+    for ev in trace.events:
+        if ev[0] == "enter":
+            _, key, oid = ev
+            predicted.update(predictor.on_method_entry(key, oid))
+        else:
+            oid = ev[1]
+            n_access += 1
+            if oid in predicted:
+                timely += 1
+            accessed.add(oid)
+            predicted.update(predictor.on_access(oid, store.cls_of(oid)))
+    acc = prefetch_accuracy(predicted, accessed)
+    return ReplayResult(
+        app=trace.app_name,
+        workload=trace.workload,
+        predictor=predictor.name,
+        precision=acc["precision"],
+        recall=acc["recall"],
+        coverage=timely / max(1, n_access),
+        true_positives=acc["true_positives"],
+        false_positives=acc["false_positives"],
+        false_negatives=acc["false_negatives"],
+        overhead=predictor.overhead.snapshot(),
+    )
+
+
+def evaluate_workload(
+    wl: Workload,
+    modes: Optional[Sequence[str]] = None,
+    rop_depth: int = 2,
+    config: Optional[SessionConfig] = None,
+) -> list[ReplayResult]:
+    """Record (train + eval runs), then replay every requested predictor —
+    miners warmed on the train run, everyone scored on the eval run.
+    ``rop_depth`` is only consulted when no ``config`` is supplied."""
+    client, _root, traces = record_workload(wl, runs=2)
+    train, eval_ = traces[0], traces[-1]
+    reg = client.logic_module.registered[wl.name]
+    cfg = config if config is not None else SessionConfig(rop_depth=rop_depth)
+    results = []
+    for mode in modes if modes is not None else available(kind="pos"):
+        predictor = make_pos_predictor(mode, config=cfg)
+        predictor.warm(train.accesses)
+        results.append(replay(eval_, predictor, client.store, reg))
+    return results
+
+
+def evaluate_apps(
+    apps: Sequence[str] = ("bank", "wordcount", "kmeans"),
+    modes: Optional[Sequence[str]] = None,
+    rop_depth: int = 2,
+) -> list[ReplayResult]:
+    catalog = _catalog()
+    out: list[ReplayResult] = []
+    for name in apps:
+        if name not in catalog:
+            raise KeyError(f"unknown app {name!r}; catalog: {sorted(catalog)}")
+        out.extend(evaluate_workload(catalog[name], modes=modes, rop_depth=rop_depth))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+
+_COLUMNS = (
+    ("app", "{}"),
+    ("workload", "{}"),
+    ("predictor", "{}"),
+    ("precision", "{:.3f}"),
+    ("recall", "{:.3f}"),
+    ("coverage", "{:.3f}"),
+    ("true_positives", "{}"),
+    ("false_positives", "{}"),
+    ("false_negatives", "{}"),
+    ("table_bytes", "{}"),
+    ("monitor_events", "{}"),
+    ("train_seconds", "{:.4f}"),
+)
+
+
+def format_table(results: Sequence[ReplayResult]) -> str:
+    rows = [[fmt.format(r.row()[k]) for k, fmt in _COLUMNS] for r in results]
+    header = [k for k, _ in _COLUMNS]
+    widths = [max(len(h), *(len(row[i]) for row in rows)) if rows else len(h)
+              for i, h in enumerate(header)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(header, widths))]
+    for row in rows:
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+    return "\n".join(lines)
+
+
+def main(argv: Optional[list[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--apps", default="bank,wordcount,kmeans,oo7,pga",
+                    help="comma-separated app names from the catalog")
+    ap.add_argument("--modes", default=None,
+                    help="comma-separated predictor names (default: all registered)")
+    ap.add_argument("--rop-depth", type=int, default=2)
+    ap.add_argument("--fast", action="store_true",
+                    help="only the three fastest-to-trace apps")
+    args = ap.parse_args(argv)
+    apps = ("bank", "wordcount", "kmeans") if args.fast else tuple(
+        a for a in args.apps.split(",") if a
+    )
+    modes = tuple(m for m in args.modes.split(",") if m) if args.modes else None
+    results = evaluate_apps(apps=apps, modes=modes, rop_depth=args.rop_depth)
+    print(format_table(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""CAPre's code-analysis predictor behind the unified interface.
+
+This is the paper's own strategy: everything is derived at registration
+time (``core.hints`` builds PH_m, ``core.injection`` generates the prefetch
+closures), so the runtime pays **no monitoring** — ``on_access`` is a no-op
+and the only scheduling point is method entry, exactly the injected
+``prefetchingExecutor.submit`` of Listing 5.
+
+Online it preserves the historical ``Session(mode="capre")`` behavior
+verbatim: the generated closure runs on the session's single-thread
+background executor and fans collection hints out on the parallel pool.
+Offline (no session) the same hint trees are expanded over the store
+snapshot via ``peek`` so the replay harness gets the predicted oid set
+without paying I/O.
+"""
+
+from __future__ import annotations
+
+from repro.core import lang
+from repro.core.injection import _HintTree, build_hint_tree
+
+from .base import Predictor, table_bytes
+
+
+def expand_hint_tree(store, root_oid: int, tree: _HintTree) -> list[int]:
+    """The oids a generated prefetch method would load for ``root_oid``,
+    computed over the current store contents without cost accounting."""
+    out: list[int] = []
+
+    def visit(oid: int, node: _HintTree) -> None:
+        out.append(oid)
+        rec = store.peek(oid)
+        for child in node.children.values():
+            ref = rec.fields.get(child.fld)
+            if ref is None:
+                continue
+            if child.card == lang.COLLECTION:
+                for e in list(ref):
+                    visit(e, child)
+            else:
+                visit(ref, child)
+
+    visit(root_oid, tree)
+    return out
+
+
+class _CountingStore:
+    """Thin store proxy charging every ``prefetch_access`` to a predictor's
+    ``Overhead`` ledger — the generated prefetch closures cannot do it
+    themselves."""
+
+    def __init__(self, store, overhead):
+        self._store = store
+        self._overhead = overhead
+
+    def prefetch_access(self, oid: int):
+        self._overhead.predictions += 1
+        return self._store.prefetch_access(oid)
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
+
+
+class StaticCapre(Predictor):
+    """Hint-driven prefetching — zero runtime monitoring."""
+
+    def __init__(self, config=None, hint_filter=None):
+        super().__init__()
+        self.config = config
+        self.hint_filter = hint_filter  # optional predicate over Hint
+        self._methods: dict[str, object] = {}
+        self._trees: dict[str, _HintTree] = {}
+
+    def attach(self, store, reg) -> None:
+        super().attach(store, reg)
+        if self.hint_filter is None:
+            self._methods = dict(reg.prefetch_methods)
+            hints = reg.report.hints
+        else:
+            from repro.core.injection import generate_prefetch_method
+
+            hints = {
+                k: tuple(h for h in hs if self.hint_filter(h))
+                for k, hs in reg.report.hints.items()
+            }
+            self._methods = {}
+            for k, hs in hints.items():
+                fn = generate_prefetch_method(hs)
+                if fn is not None:
+                    self._methods[k] = fn
+        self._trees = {k: build_hint_tree(hs) for k, hs in hints.items() if hs}
+        # the analysis is this strategy's entire training cost
+        self.overhead.train_seconds += reg.analysis_time_s
+        self.overhead.table_bytes = table_bytes(
+            sum(len(hs) for hs in hints.values())
+        )
+
+    def on_method_entry(self, method_key: str, this_oid: int) -> list[int]:
+        if self.session is not None:
+            fn = self._methods.get(method_key)
+            if fn is not None:
+                # the generated closure is opaque: meter its prefetches
+                # through a counting proxy so the online ledger is
+                # comparable with the miners' (which count via _emit)
+                store = _CountingStore(self.session.store, self.overhead)
+                runtime = self.session.runtime
+                self.session.runtime.schedule(lambda: fn(store, runtime, this_oid))
+            return []
+        tree = self._trees.get(method_key)
+        if tree is None:
+            return []
+        return self._emit(expand_hint_tree(self.store, this_oid, tree))

@@ -66,12 +66,15 @@ class HostParamStore:
 class WeightStreamer:
     """Streams parameter groups onto the device ahead of use.
 
-    mode:
+    ``mode`` resolves through the ``repro.predict`` registry to a
+    ``StreamPolicy`` (None = fetch on demand, every use stalls):
+
       * "capre": follows the PrefetchPlan order, ``k_ahead`` groups ahead,
         collections fanned out on the parallel pool;
       * "rop":   when a group is entered, fetch the next ``rop_depth``
         groups in tree order (schema heuristic, plan-blind);
-      * None:    fetch on demand (every use stalls).
+      * "markov-miner" / "hybrid": trace-mined group transitions — warm
+        them with ``warm_group_trace`` (the ``group_log`` of a prior run).
     """
 
     def __init__(
@@ -82,6 +85,7 @@ class WeightStreamer:
         k_ahead: int = 2,
         rop_depth: int = 1,
         workers: int = 4,
+        warm_group_trace: Optional[list] = None,
     ):
         self.store = store
         self.plan = plan
@@ -91,10 +95,19 @@ class WeightStreamer:
         self.metrics = StreamMetrics()
         self._cache: dict[str, np.ndarray] = {}
         self._inflight: dict[str, threading.Event] = {}
+        self._used: set[str] = set()  # paths actually served to compute
         self._lock = threading.Lock()
         self._pool = ThreadPoolExecutor(max_workers=workers, thread_name_prefix="stream")
         self._groups = self._group_order()
         self._done = False
+        self.group_log: list[int] = []  # entered group indices (miner food)
+        self._policy = None
+        if mode is not None:
+            from repro import predict
+
+            self._policy = predict.make_stream_policy(mode)
+            if warm_group_trace:
+                self._policy.warm(warm_group_trace)
 
     # -- grouping ------------------------------------------------------------
 
@@ -137,6 +150,7 @@ class WeightStreamer:
         with self._lock:
             arr = self._cache.get(path)
             ev = self._inflight.get(path)
+            self._used.add(path)
         if arr is not None:
             self.metrics.prefetch_hits += 1
             return arr
@@ -156,18 +170,11 @@ class WeightStreamer:
 
     def on_group_start(self, group_index: int) -> None:
         """Called when the compute frontier enters group ``group_index`` —
-        the analogue of the injected prefetch-method invocation."""
-        if self.mode == "capre":
-            for gi in range(group_index + 1, min(group_index + 1 + self.k_ahead, len(self._groups))):
-                for rec in self._groups[gi]:
-                    self._fetch_async(rec.path)
-        elif self.mode == "rop":
-            for gi in range(group_index + 1, min(group_index + 1 + self.rop_depth, len(self._groups))):
-                # ROP cannot prefetch collections (section 2): skip stacked
-                # layer groups entirely
-                for rec in self._groups[gi]:
-                    if not rec.collection:
-                        self._fetch_async(rec.path)
+        the analogue of the injected prefetch-method invocation.  Delegates
+        to the registry-resolved stream policy."""
+        self.group_log.append(group_index)
+        if self._policy is not None:
+            self._policy.on_group_start(self, group_index)
 
     def run_plan(self, compute_s_per_group: float = 0.0,
                  compute_fn: Optional[Callable[[int, dict], None]] = None) -> float:
@@ -175,7 +182,7 @@ class WeightStreamer:
         then the compute thread `get`s every record in the group (stalling
         on misses) and runs the group compute.  Returns wall seconds."""
         t0 = time.perf_counter()
-        if self.mode in ("capre", "rop"):
+        if self._policy is not None:
             self.on_group_start(-1)
         for gi, group in enumerate(self._groups):
             arrays = {}
@@ -189,19 +196,26 @@ class WeightStreamer:
             self._evict_before(gi)
         wall = time.perf_counter() - t0
         with self._lock:
-            used = {r.path for g in self._groups for r in g}
             for p, a in self._cache.items():
-                if p not in used:
+                if p not in self._used:
                     self.metrics.wasted_bytes += a.nbytes
         return wall
 
     def _evict_before(self, gi: int) -> None:
-        """Free groups already consumed (bounded device memory)."""
+        """Free groups already consumed (bounded device memory).  An evicted
+        array that was prefetched but never served to compute is waste —
+        charged here, where it leaves the cache, so prefetched-then-evicted
+        mistakes are not invisible to the accounting."""
         if gi < 1:
             return
         with self._lock:
             for rec in self._groups[gi - 1]:
-                self._cache.pop(rec.path, None)
+                arr = self._cache.pop(rec.path, None)
+                if arr is not None and rec.path not in self._used:
+                    self.metrics.wasted_bytes += arr.nbytes
+                # usage is per-residency: once evicted, a re-prefetch of the
+                # same path must be served again to count as useful
+                self._used.discard(rec.path)
 
     def close(self) -> None:
         self._pool.shutdown(wait=True, cancel_futures=True)

@@ -16,6 +16,8 @@ Sharding rules (over every assigned architecture × shape × layout):
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
