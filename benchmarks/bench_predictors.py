@@ -3,16 +3,23 @@ execution time + live prefetch accuracy + predictor overhead, on the paper
 benchmark apps (the companion to the offline replay tables of
 ``repro.predict.evaluate``).
 
-For each (app, mode): a fresh store is populated, one *monitoring run*
-records the access trace with prefetching off (the warm-up a trace-mined
-predictor needs — its cost is what CAPre's zero-monitoring story avoids),
-then ``reps`` cold-cache repetitions run with the mode's predictor live.
+For each (app, mode, cache capacity): a fresh store is populated, one
+*monitoring run* records the access trace with prefetching off (the warm-up
+a trace-mined predictor needs — its cost is what CAPre's zero-monitoring
+story avoids), then ``reps`` cold-cache repetitions run with the mode's
+predictor live.  A bounded per-DS cache (``cache_capacities`` other than 0)
+exposes prefetch thrashing: useless ROP reads evict objects the application
+still needs.
+
+Results are also written as a CSV artifact (``artifacts/predict/bench.csv``)
+so wall-clock prediction-quality regressions are visible across PRs.
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_predictors [--fast]
 """
 
 from __future__ import annotations
 
+import os
 import statistics
 import time
 
@@ -31,53 +38,77 @@ PREDICTOR_MODES = (
 
 
 def run(reps: int = 3, apps=("bank", "wordcount", "kmeans"), modes=PREDICTOR_MODES,
-        n_services: int = 4, parallel_workers: int = 16) -> list[BenchResult]:
+        n_services: int = 4, parallel_workers: int = 16,
+        cache_capacities=(0,)) -> list[BenchResult]:
     catalog = _catalog()
     results: list[BenchResult] = []
     for app_name in apps:
         wl = catalog[app_name]
-        for mode_name, mode in modes:
-            client = POSClient(n_services=n_services, latency=BENCH_LATENCY)
-            client.register(wl.build_app())
-            root = wl.populate(client.store)
-            # monitoring run: record the trace the miners train on
-            warm_trace = None
-            if mode in ("markov-miner", "hybrid"):
-                client.store.trace = []
-                with client.session(wl.name, mode=None) as s:
-                    wl.run_once(s, root)
-                warm_trace = list(client.store.trace)
-                client.store.trace = None
-            times, metrics = [], {}
-            for _ in range(reps):
-                client.store.reset_runtime_state()
-                with client.session(
-                    wl.name,
-                    mode=mode,
-                    rop_depth=2,
-                    parallel_workers=parallel_workers,
-                    warm_trace=warm_trace,
-                ) as s:
-                    t0 = time.perf_counter()
-                    wl.run_once(s, root)
-                    times.append(time.perf_counter() - t0)
-                    s.drain(30.0)
-                    metrics = client.store.metrics.snapshot()
-                    metrics.update(client.store.prefetch_accuracy())
-                    if s.predictor is not None:
-                        metrics.update(s.predictor.overhead.snapshot())
-            results.append(
-                BenchResult(
-                    benchmark=f"predictors_{app_name}",
-                    config=wl.workload,
-                    mode=mode_name,
-                    mean_s=statistics.mean(times),
-                    stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
-                    reps=reps,
-                    metrics=metrics,
+        for capacity in cache_capacities:
+            for mode_name, mode in modes:
+                client = POSClient(
+                    n_services=n_services, latency=BENCH_LATENCY, cache_capacity=capacity
                 )
-            )
+                client.register(wl.build_app())
+                root = wl.populate(client.store)
+                # monitoring run: record the trace the miners train on
+                warm_trace = None
+                if mode in ("markov-miner", "hybrid"):
+                    client.store.trace = []
+                    with client.session(wl.name, mode=None) as s:
+                        wl.run_once(s, root)
+                    warm_trace = list(client.store.trace)
+                    client.store.trace = None
+                times, metrics = [], {}
+                for _ in range(reps):
+                    client.store.reset_runtime_state()
+                    with client.session(
+                        wl.name,
+                        mode=mode,
+                        rop_depth=2,
+                        parallel_workers=parallel_workers,
+                        warm_trace=warm_trace,
+                    ) as s:
+                        t0 = time.perf_counter()
+                        wl.run_once(s, root)
+                        times.append(time.perf_counter() - t0)
+                        s.drain(30.0)
+                        metrics = client.store.metrics.snapshot()
+                        metrics.update(client.store.prefetch_accuracy())
+                        metrics["evictions"] = sum(ds.evictions for ds in client.store.services)
+                        if s.predictor is not None:
+                            metrics.update(s.predictor.overhead.snapshot())
+                cfg = wl.workload if not capacity else f"{wl.workload}_c{capacity}"
+                results.append(
+                    BenchResult(
+                        benchmark=f"predictors_{app_name}",
+                        config=cfg,
+                        mode=mode_name,
+                        mean_s=statistics.mean(times),
+                        stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
+                        reps=reps,
+                        metrics=metrics,
+                    )
+                )
     return results
+
+
+def write_csv(results: list[BenchResult], path: str = "artifacts/predict/bench.csv") -> str:
+    """Flatten BenchResults (one row per app/config/mode, metrics inline)
+    into the tracked artifact the regression check reads."""
+    import csv
+
+    metric_keys = sorted({k for r in results for k in r.metrics})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", newline="") as f:
+        writer = csv.writer(f)
+        writer.writerow(["benchmark", "config", "mode", "mean_s", "stdev_s", "reps", *metric_keys])
+        for r in results:
+            writer.writerow(
+                [r.benchmark, r.config, r.mode, f"{r.mean_s:.6f}", f"{r.stdev_s:.6f}", r.reps]
+                + [("" if r.metrics.get(k) is None else r.metrics.get(k, "")) for k in metric_keys]
+            )
+    return path
 
 
 def main() -> None:
@@ -86,14 +117,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--cache-capacity", default="0",
+                    help="comma-separated per-DS cache capacities to sweep (0 = unbounded)")
+    ap.add_argument("--csv", default="artifacts/predict/bench.csv",
+                    help="CSV artifact path ('' disables)")
     args = ap.parse_args()
     apps = ("bank",) if args.fast else ("bank", "wordcount", "kmeans")
-    results = run(reps=args.reps, apps=apps)
+    capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
+    results = run(reps=args.reps, apps=apps, cache_capacities=capacities)
     print("name,us_per_call,derived")
     print_results(results)
     for r in results:
-        acc = {k: r.metrics.get(k) for k in ("precision", "recall", "table_bytes", "monitor_events")}
-        print(f"# {r.benchmark}/{r.mode}: {acc}")
+        acc = {k: r.metrics.get(k) for k in
+               ("precision", "recall", "evictions", "table_bytes", "monitor_events")}
+        print(f"# {r.benchmark}/{r.config}/{r.mode}: {acc}")
+    if args.csv:
+        print(f"# wrote {write_csv(results, args.csv)}")
 
 
 if __name__ == "__main__":

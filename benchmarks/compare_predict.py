@@ -1,0 +1,92 @@
+"""Regression gate over the offline replay artifact: compare a freshly
+generated ``artifacts/predict/replay.csv`` against the committed baseline
+and fail if prediction timeliness regressed (the ``benchmarks/compare.py``
+of the prediction subsystem).
+
+The replay engine is fully deterministic (virtual clock, no real threads in
+the scoring loop), so equality-modulo-tolerance is a meaningful check:
+
+  * every baseline (app, workload, predictor, cache_capacity) row must
+    still exist in the fresh file with a populated ``timely_coverage`` —
+    a predictor falling out of the registry or an app out of the sweep is
+    itself a regression, not a skip;
+  * per row, ``timely_coverage`` must not drop more than ``--tolerance``
+    (default 0.02) below the baseline — static-capre is the headline (the
+    paper's claim), but every predictor is held to its baseline so a
+    regression in a *baseline's* scoring is caught too;
+  * ``stall_saved_pct`` is reported alongside for context (not gated:
+    it is derived from the same clock, gating both would double-count).
+
+Usage: PYTHONPATH=src python -m benchmarks.compare_predict \
+    artifacts/predict/replay.csv artifacts/predict/baseline.csv [--tolerance 0.02]
+"""
+
+from __future__ import annotations
+
+import csv
+import sys
+
+Key = tuple[str, str, str, str]  # (app, workload, predictor, cache_capacity)
+
+
+def _load(path: str) -> dict[Key, dict]:
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    return {
+        (r["app"], r["workload"], r["predictor"], r["cache_capacity"]): r for r in rows
+    }
+
+
+def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> list[str]:
+    """Returns a list of human-readable regression messages (empty = pass)."""
+    current, baseline = _load(current_path), _load(baseline_path)
+    failures: list[str] = []
+    for key in sorted(baseline):
+        app, workload, predictor, cap = key
+        label = f"{app}/{workload}/{predictor}@cache={cap}"
+        base_tc = baseline[key].get("timely_coverage")
+        if not base_tc:
+            continue  # baseline never scored this row; nothing to hold it to
+        cur = current.get(key)
+        if cur is None:
+            failures.append(f"{label}: row missing from {current_path}")
+            continue
+        cur_tc = cur.get("timely_coverage")
+        if not cur_tc:
+            failures.append(f"{label}: timely_coverage cell is empty in {current_path}")
+            continue
+        cur_f, base_f = float(cur_tc), float(base_tc)
+        if cur_f < base_f - tolerance:
+            failures.append(
+                f"{label}: timely_coverage {cur_f:.3f} < baseline {base_f:.3f} "
+                f"- {tolerance} (stall_saved {cur.get('stall_saved_pct')}% vs "
+                f"{baseline[key].get('stall_saved_pct')}%)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="freshly generated replay.csv")
+    ap.add_argument("baseline", help="committed baseline.csv")
+    ap.add_argument("--tolerance", type=float, default=0.02)
+    args = ap.parse_args(argv)
+    failures = compare(args.current, args.baseline, tolerance=args.tolerance)
+    if failures:
+        print("PREDICTION TIMELINESS REGRESSION:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    cur = _load(args.current)
+    for (app, workload, pred, cap), r in sorted(cur.items()):
+        if pred == "static-capre":
+            print(f"ok {app}/{workload}/static-capre@cache={cap}: "
+                  f"timely_coverage={r['timely_coverage']} stall_saved={r['stall_saved_pct']}%")
+    print(f"prediction timeliness: {len(cur)} rows within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,10 +41,15 @@ def main() -> None:
 
     from . import bench_predictors
 
-    results += bench_predictors.run(
-        reps=reps, apps=("bank",) if fast else ("bank", "wordcount", "kmeans")
+    predictor_results = bench_predictors.run(
+        reps=reps,
+        apps=("bank",) if fast else ("bank", "wordcount", "kmeans"),
+        cache_capacities=(0,) if fast else (0, 64),
     )
+    results += predictor_results
     print_results(results)
+    # tracked artifact so prediction-quality regressions are visible across PRs
+    bench_predictors.write_csv(predictor_results)
     sys.stdout.flush()
 
     for line in bench_analysis_time.run():

@@ -27,7 +27,8 @@ class SyntheticLMSource:
     behind the same (seed, step) -> batch interface."""
 
     def __init__(self, vocab_size: int, batch: int, seq_len: int, seed: int = 0,
-                 embeds_dim: int = 0, frames: int = 0, mrope: bool = False):
+                 embeds_dim: int = 0, frames: int = 0, mrope: bool = False,
+                 active_vocab: int = 512):
         self.vocab_size = vocab_size
         self.batch = batch
         self.seq_len = seq_len
@@ -35,13 +36,19 @@ class SyntheticLMSource:
         self.embeds_dim = embeds_dim
         self.frames = frames
         self.mrope = mrope
+        self.active_vocab = min(vocab_size, active_vocab) if active_vocab else vocab_size
 
     def batch_at(self, step: int) -> dict:
         rng = np.random.default_rng((self.seed, step))
         B, S = self.batch, self.seq_len
-        V = self.vocab_size
         # learnable structure (uniform-random tokens would already sit at the
-        # ln(V) CE optimum): a noisy affine Markov chain over the vocab
+        # ln(V) CE optimum): a noisy affine Markov chain over an active
+        # sub-vocabulary.  Restricting the chain to ``active_vocab`` tokens
+        # keeps short smoke runs learnable — the model first discovers the
+        # support (ln(V) -> ln(A) within a few steps), then the transitions;
+        # a chain over all 32k tokens is a permutation table no small token
+        # budget can memorize, so the loss never moves.
+        V = self.active_vocab
         tokens = np.empty((B, S + 1), np.int32)
         tokens[:, 0] = rng.integers(0, V, size=B)
         noise = rng.random(size=(B, S)) < 0.15

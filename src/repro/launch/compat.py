@@ -1,11 +1,33 @@
-"""Small JAX API compatibility layer (pinned against jax 0.8.x)."""
+"""Small JAX API compatibility layer.
+
+``shard_map`` moved out of ``jax.experimental`` in jax 0.6 and its
+"check the body's replication/varying-manual-axes claims" kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way.  Feature-detect at import time
+so the same call sites run on both API generations (the pinned environment
+ships jax 0.4.x, where only the experimental spelling exists).
+"""
 
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The kwarg rename did not land in the same release as the top-level
+# promotion, so detect it from the signature of whichever function we got,
+# not from where the symbol lives.
+_CHECK_KWARG = (
+    "check_vma" if "check_vma" in inspect.signature(_shard_map).parameters else "check_rep"
+)
 
 
 def shard_map(f, mesh, in_specs, out_specs):
     """jax.shard_map with varying-manual-axes checking off (we use psum /
     axis_index freely inside bodies)."""
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{_CHECK_KWARG: False}
+    )

@@ -131,10 +131,12 @@ class Session:
 class POSClient:
     """Convenience facade: one store + one Logic Module."""
 
-    def __init__(self, n_services: int = 4, latency=None):
+    def __init__(self, n_services: int = 4, latency=None, cache_capacity: int = 0):
         from .latency import ZERO
 
-        self.store = ObjectStore(n_services=n_services, latency=latency or ZERO)
+        self.store = ObjectStore(
+            n_services=n_services, latency=latency or ZERO, cache_capacity=cache_capacity
+        )
         self.logic_module = LogicModule()
 
     def register(self, app: lang.Application, policy: str = INCLUDE_BRANCH_DEPENDENT) -> RegisteredApp:

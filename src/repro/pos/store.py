@@ -114,21 +114,26 @@ class DataService:
             self._inflight.clear()
 
 
-def prefetch_accuracy(prefetched: set, accessed: set) -> dict[str, float]:
+def prefetch_accuracy(prefetched: set, accessed: set) -> dict:
     """Set-based precision/recall of a prefetcher — shared between the live
     store accounting and the offline trace-replay harness
-    (``predict.evaluate``), so both report identical definitions."""
+    (``predict.evaluate``), so both report identical definitions.
+
+    A predictor that emitted nothing has *no* precision, not a precision of
+    0.0 — the two used to be indistinguishable and recorded phantom zeros in
+    comparison tables.  Undefined ratios are now ``None`` (rendered NaN-safe
+    by consumers) and ``evaluated`` says whether any prefetch happened at
+    all."""
     tp = len(prefetched & accessed)
     fp = len(prefetched - accessed)
     fn = len(accessed - prefetched)
-    denom_p = max(1, tp + fp)
-    denom_r = max(1, tp + fn)
     return {
         "true_positives": tp,
         "false_positives": fp,
         "false_negatives": fn,
-        "precision": tp / denom_p,
-        "recall": tp / denom_r,
+        "precision": tp / (tp + fp) if tp + fp else None,
+        "recall": tp / (tp + fn) if tp + fn else None,
+        "evaluated": bool(prefetched),
     }
 
 

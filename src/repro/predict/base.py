@@ -48,6 +48,11 @@ class Overhead:
     monitor_events: int = 0  # accesses observed at runtime (monitoring tax)
     train_seconds: float = 0.0  # offline mining / analysis wall time
     predictions: int = 0  # oids emitted (prefetch pressure)
+    # timeliness (filled by the virtual-clock replay engine): a prediction
+    # only helps if its load *completes* before the access needs it
+    late_predictions: int = 0  # predicted, but load still in flight (or queued) at need
+    evicted_before_use: int = 0  # prefetched loads evicted before any access
+    hidden_seconds: float = 0.0  # disk seconds removed from the app critical path
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)

@@ -7,31 +7,46 @@ head-to-head comparison of every registered predictor:
      the interleaved stream of method entries (the injected scheduling
      points) and application-path object accesses; two cold-cache runs are
      recorded so trace miners can train on the first and be scored on the
-     second (the warm-up run a monitoring approach needs anyway);
+     second (the warm-up run a monitoring approach needs anyway).  The five
+     apps record concurrently on a thread pool — each gets its own store.
   2. **replay** — feed the eval run's events to a fresh instance of each
-     predictor: ``enter`` events drive ``on_method_entry``, ``access``
-     events drive ``on_access`` (cold-cache misses are first accesses);
-     the predicted oid set accumulates with no store I/O in the loop;
+     predictor under a **virtual clock** driven by the pure-arithmetic side
+     of ``pos.latency``: every predicted oid is scheduled on its Data
+     Service's ``VirtualDisk`` (``parallel_per_ds`` slots) and gets a
+     deterministic *ready-at* time; every access gets a *needed-at* time
+     (remote hops + think time advance the application clock).  A bounded
+     per-service LRU cache (``cache_capacity``) charges eager predictors
+     for thrash evictions.
   3. **score** — precision/recall via the same ``prefetch_accuracy``
-     definition the live store uses, plus **coverage** (the fraction of
-     access events whose oid had already been predicted when the access
-     happened — order-aware, unlike set recall) and the predictor's
-     ``Overhead`` ledger (mined-table bytes, monitored events, train
-     time — the costs the paper says the monitoring family pays).
+     definition the live store uses, **coverage** (order-aware: the oid was
+     predicted before the access, latency ignored), and the timeliness
+     metrics the paper's argument actually rests on:
 
-Replay measures *prediction quality*, not I/O timing: a predicted object is
-counted prefetched even if a real prefetch thread might have lost the race.
-``benchmarks/bench_predictors.py`` is the end-to-end wall-clock companion.
+     * ``timely_coverage`` — fraction of accesses whose oid was predicted
+       AND resident (ready-at <= needed-at) when the access happened;
+     * ``partial_hide``    — fraction whose predicted load was still in
+       flight at need (the app stalls for the remainder only);
+     * ``stall_seconds``   — simulated disk wait on the app critical path,
+       alongside the no-prefetch baseline and the percentage saved.
 
-Run: ``PYTHONPATH=src python -m repro.predict.evaluate [--fast] [--apps a,b]``
+Replay is fully deterministic (no real sleeping, no real threads in the
+scoring loop), so the CSV artifacts written under ``artifacts/predict/``
+are regression-checkable across PRs (``benchmarks/compare_predict.py``).
+``benchmarks/bench_predictors.py`` is the wall-clock companion.
+
+Run: ``PYTHONPATH=src python -m repro.predict.evaluate
+[--fast] [--apps a,b] [--cache-capacity 0,64,256] [--out artifacts/predict]``
 """
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 from repro.pos.client import POSClient, Session, SessionConfig
+from repro.pos.latency import REPLAY, LatencyModel, VirtualDisk
 from repro.pos.store import prefetch_accuracy
 
 from . import available, make_pos_predictor
@@ -170,9 +185,156 @@ def record_workload(
     return client, root, traces
 
 
+def record_catalog(
+    workloads: Sequence[Workload], runs: int = 2, max_workers: Optional[int] = None
+) -> dict[str, tuple[POSClient, int, list[RecordedTrace]]]:
+    """Record every workload concurrently, each on its own store, so the
+    traces stay byte-identical to serial recording.  On the default
+    zero-latency store the interpreter is CPU-bound and the GIL caps the
+    overlap; the pool pays off when recording is given a sleeping latency
+    model (and costs nothing but threads otherwise).  Returns
+    ``{app_name: (client, root, traces)}`` in the order requested."""
+    if max_workers is None:
+        max_workers = max(1, len(workloads))
+    with ThreadPoolExecutor(max_workers=max_workers) as pool:
+        futures = {wl.name: pool.submit(record_workload, wl, runs) for wl in workloads}
+        return {name: fut.result() for name, fut in futures.items()}
+
+
 # ---------------------------------------------------------------------------
-# replay
+# virtual-clock replay
 # ---------------------------------------------------------------------------
+
+
+@dataclass
+class _CacheEntry:
+    source: str  # "pf" | "demand"
+    used: bool = False
+
+
+class VirtualReplay:
+    """The timeliness engine: one ``VirtualDisk`` + bounded LRU per Data
+    Service, an application clock advanced by remote hops / stalls / think
+    time, and prefetch loads that become resident at their *done* time.
+
+    Semantics mirror the live store: a prefetch loads the object where it
+    is stored (no redirection charged); a demand miss queues on the same
+    disk slots the prefetches occupy, so over-eager predictors congest the
+    application's own loads; concurrent interest in one oid coalesces onto
+    the in-flight load."""
+
+    def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0):
+        n = len(store.services)
+        self.store = store
+        self.latency = latency
+        self.cache_capacity = cache_capacity
+        self.disks = [VirtualDisk(latency) for _ in range(n)]
+        self.caches: list[dict[int, _CacheEntry]] = [{} for _ in range(n)]
+        self.inflight: list[dict[int, tuple[float, float]]] = [{} for _ in range(n)]
+        self.t = 0.0
+        self.cur_ds: Optional[int] = None
+        # counters
+        self.n_access = 0
+        self.timely = 0
+        self.partial = 0
+        self.remote_hops = 0
+        self.stall_seconds = 0.0
+        self.hidden_seconds = 0.0
+        self.demand_loads = 0
+        self.prefetch_loads = 0
+        self.prefetch_requests = 0
+        self.evictions = 0
+        self.evicted_before_use = 0
+        self.thrash_misses = 0
+        self._evicted_ever: set[int] = set()
+
+    # -- cache mechanics ----------------------------------------------------
+
+    def _materialize(self, ds_i: int, t: float) -> None:
+        """Promote in-flight loads that completed by ``t`` to resident, in
+        completion order (so LRU age matches the virtual timeline)."""
+        landed = sorted(
+            (done, oid) for oid, (_start, done) in self.inflight[ds_i].items() if done <= t
+        )
+        for _done, oid in landed:
+            del self.inflight[ds_i][oid]
+            self._insert(ds_i, oid, "pf")
+
+    def _insert(self, ds_i: int, oid: int, source: str, used: bool = False) -> None:
+        cache = self.caches[ds_i]
+        prev = cache.pop(oid, None)
+        cache[oid] = prev if prev is not None else _CacheEntry(source, used)
+        if self.cache_capacity and len(cache) > self.cache_capacity:
+            victim_oid = next(iter(cache))
+            victim = cache.pop(victim_oid)
+            self.evictions += 1
+            self._evicted_ever.add(victim_oid)
+            if victim.source == "pf" and not victim.used:
+                self.evicted_before_use += 1
+
+    # -- the two event kinds -------------------------------------------------
+
+    def predict(self, oids: Sequence[int]) -> None:
+        """Predictor emitted ``oids`` at the current virtual time: schedule
+        a disk load on each one's own Data Service unless already resident
+        or in flight (request coalescing)."""
+        for oid in oids:
+            ds_i = self.store.service_of(oid).ds_id
+            self._materialize(ds_i, self.t)
+            self.prefetch_requests += 1
+            cache = self.caches[ds_i]
+            if oid in cache:
+                entry = cache.pop(oid)
+                cache[oid] = entry  # LRU bump, keep source/used
+                continue
+            if oid in self.inflight[ds_i]:
+                continue
+            self.inflight[ds_i][oid] = self.disks[ds_i].schedule(self.t)
+            self.prefetch_loads += 1
+
+    def access(self, oid: int) -> None:
+        """Application accesses ``oid``: redirect execution if needed, then
+        wait out whatever part of the disk load prefetching did not hide."""
+        ds_i = self.store.service_of(oid).ds_id
+        if self.cur_ds != ds_i:
+            self.t += self.latency.remote_hop
+            self.cur_ds = ds_i
+            self.remote_hops += 1
+        self._materialize(ds_i, self.t)
+        self.n_access += 1
+        needed_at = self.t
+        cache = self.caches[ds_i]
+        entry = cache.get(oid)
+        if entry is not None:
+            # resident: ready-at <= needed-at. Timely iff prefetching (not a
+            # prior demand load) put it there.
+            cache.pop(oid)
+            cache[oid] = entry
+            if entry.source == "pf":
+                if not entry.used:
+                    self.hidden_seconds += self.latency.disk_load
+                self.timely += 1
+            entry.used = True
+        elif oid in self.inflight[ds_i]:
+            # predicted, still in flight: the app waits out the remainder
+            _start, done = self.inflight[ds_i].pop(oid)
+            stall = done - needed_at
+            self.stall_seconds += stall
+            self.hidden_seconds += max(0.0, self.latency.disk_load - stall)
+            self.t = done
+            self.partial += 1
+            self._insert(ds_i, oid, "pf", used=True)
+        else:
+            # unpredicted (or evicted): full demand load, queueing behind
+            # whatever the prefetcher has piled onto this service's disk
+            _start, done = self.disks[ds_i].schedule(needed_at)
+            self.stall_seconds += done - needed_at
+            self.t = done
+            self.demand_loads += 1
+            if oid in self._evicted_ever:
+                self.thrash_misses += 1
+            self._insert(ds_i, oid, "demand", used=True)
+        self.t += self.latency.think
 
 
 @dataclass
@@ -180,12 +342,22 @@ class ReplayResult:
     app: str
     workload: str
     predictor: str
-    precision: float
-    recall: float
+    cache_capacity: int
+    precision: Optional[float]
+    recall: Optional[float]
+    evaluated: bool
     coverage: float
+    timely_coverage: float
+    partial_hide: float
+    stall_seconds: float
+    baseline_stall_seconds: float
+    stall_saved_pct: float
     true_positives: int
     false_positives: int
     false_negatives: int
+    evictions: int
+    thrash_misses: int
+    prefetch_loads: int
     overhead: dict = field(default_factory=dict)
 
     def row(self) -> dict:
@@ -194,36 +366,87 @@ class ReplayResult:
         return out
 
 
-def replay(trace: RecordedTrace, predictor: Predictor, store, reg) -> ReplayResult:
-    """Drive ``predictor`` through the recorded event stream and score the
-    oids it would have prefetched against the oids actually accessed."""
+def replay_baseline(
+    trace: RecordedTrace, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0
+) -> VirtualReplay:
+    """The no-prefetch reference: every cold (or thrashed-out) access pays
+    the full disk load.  Same trace, same clock, no predictions."""
+    engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity)
+    for ev in trace.events:
+        if ev[0] == "access":
+            engine.access(ev[1])
+    return engine
+
+
+def replay(
+    trace: RecordedTrace,
+    predictor: Predictor,
+    store,
+    reg,
+    latency: LatencyModel = REPLAY,
+    cache_capacity: int = 0,
+    baseline_stall_seconds: Optional[float] = None,
+) -> ReplayResult:
+    """Drive ``predictor`` through the recorded event stream on the virtual
+    clock and score what its prefetches would have hidden."""
     predictor.attach(store, reg)
+    engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity)
     predicted: set[int] = set()
     accessed: set[int] = set()
-    n_access, timely = 0, 0
+    n_access, covered = 0, 0
     for ev in trace.events:
         if ev[0] == "enter":
             _, key, oid = ev
-            predicted.update(predictor.on_method_entry(key, oid))
+            out = predictor.on_method_entry(key, oid)
+            predicted.update(out)
+            engine.predict(out)
         else:
             oid = ev[1]
             n_access += 1
             if oid in predicted:
-                timely += 1
+                covered += 1
             accessed.add(oid)
-            predicted.update(predictor.on_access(oid, store.cls_of(oid)))
+            engine.access(oid)
+            out = predictor.on_access(oid, store.cls_of(oid))
+            predicted.update(out)
+            engine.predict(out)
+    if baseline_stall_seconds is None:
+        baseline_stall_seconds = replay_baseline(
+            trace, store, latency=latency, cache_capacity=cache_capacity
+        ).stall_seconds
+    saved = (
+        100.0 * (1.0 - engine.stall_seconds / baseline_stall_seconds)
+        if baseline_stall_seconds
+        else 0.0
+    )
     acc = prefetch_accuracy(predicted, accessed)
+    overhead = predictor.overhead.snapshot()
+    # timeliness costs land on the ledger snapshot (Hybrid derives its
+    # ledger from its parts, so mutate the dict, not the property)
+    overhead["late_predictions"] = engine.partial
+    overhead["evicted_before_use"] = engine.evicted_before_use
+    overhead["hidden_seconds"] = engine.hidden_seconds
     return ReplayResult(
         app=trace.app_name,
         workload=trace.workload,
         predictor=predictor.name,
+        cache_capacity=cache_capacity,
         precision=acc["precision"],
         recall=acc["recall"],
-        coverage=timely / max(1, n_access),
+        evaluated=acc["evaluated"],
+        coverage=covered / max(1, n_access),
+        timely_coverage=engine.timely / max(1, engine.n_access),
+        partial_hide=engine.partial / max(1, engine.n_access),
+        stall_seconds=engine.stall_seconds,
+        baseline_stall_seconds=baseline_stall_seconds,
+        stall_saved_pct=saved,
         true_positives=acc["true_positives"],
         false_positives=acc["false_positives"],
         false_negatives=acc["false_negatives"],
-        overhead=predictor.overhead.snapshot(),
+        evictions=engine.evictions,
+        thrash_misses=engine.thrash_misses,
+        prefetch_loads=engine.prefetch_loads,
+        overhead=overhead,
     )
 
 
@@ -232,19 +455,38 @@ def evaluate_workload(
     modes: Optional[Sequence[str]] = None,
     rop_depth: int = 2,
     config: Optional[SessionConfig] = None,
+    cache_capacities: Sequence[int] = (0,),
+    latency: LatencyModel = REPLAY,
+    recorded: Optional[tuple[POSClient, int, list[RecordedTrace]]] = None,
 ) -> list[ReplayResult]:
-    """Record (train + eval runs), then replay every requested predictor —
-    miners warmed on the train run, everyone scored on the eval run.
-    ``rop_depth`` is only consulted when no ``config`` is supplied."""
-    client, _root, traces = record_workload(wl, runs=2)
+    """Record (train + eval runs), then replay every requested predictor
+    under every cache capacity — miners warmed on the train run, everyone
+    scored on the eval run.  ``rop_depth`` is only consulted when no
+    ``config`` is supplied; pass ``recorded`` to reuse traces from
+    ``record_catalog``."""
+    client, _root, traces = recorded if recorded is not None else record_workload(wl, runs=2)
     train, eval_ = traces[0], traces[-1]
     reg = client.logic_module.registered[wl.name]
     cfg = config if config is not None else SessionConfig(rop_depth=rop_depth)
     results = []
-    for mode in modes if modes is not None else available(kind="pos"):
-        predictor = make_pos_predictor(mode, config=cfg)
-        predictor.warm(train.accesses)
-        results.append(replay(eval_, predictor, client.store, reg))
+    for capacity in cache_capacities:
+        baseline = replay_baseline(
+            eval_, client.store, latency=latency, cache_capacity=capacity
+        ).stall_seconds
+        for mode in modes if modes is not None else available(kind="pos"):
+            predictor = make_pos_predictor(mode, config=cfg)
+            predictor.warm(train.accesses)
+            results.append(
+                replay(
+                    eval_,
+                    predictor,
+                    client.store,
+                    reg,
+                    latency=latency,
+                    cache_capacity=capacity,
+                    baseline_stall_seconds=baseline,
+                )
+            )
     return results
 
 
@@ -252,18 +494,31 @@ def evaluate_apps(
     apps: Sequence[str] = ("bank", "wordcount", "kmeans"),
     modes: Optional[Sequence[str]] = None,
     rop_depth: int = 2,
+    cache_capacities: Sequence[int] = (0,),
+    latency: LatencyModel = REPLAY,
 ) -> list[ReplayResult]:
     catalog = _catalog()
-    out: list[ReplayResult] = []
     for name in apps:
         if name not in catalog:
             raise KeyError(f"unknown app {name!r}; catalog: {sorted(catalog)}")
-        out.extend(evaluate_workload(catalog[name], modes=modes, rop_depth=rop_depth))
+    recorded = record_catalog([catalog[name] for name in apps])
+    out: list[ReplayResult] = []
+    for name in apps:
+        out.extend(
+            evaluate_workload(
+                catalog[name],
+                modes=modes,
+                rop_depth=rop_depth,
+                cache_capacities=cache_capacities,
+                latency=latency,
+                recorded=recorded[name],
+            )
+        )
     return out
 
 
 # ---------------------------------------------------------------------------
-# reporting
+# reporting / artifacts
 # ---------------------------------------------------------------------------
 
 
@@ -271,20 +526,42 @@ _COLUMNS = (
     ("app", "{}"),
     ("workload", "{}"),
     ("predictor", "{}"),
+    ("cache_capacity", "{}"),
     ("precision", "{:.3f}"),
     ("recall", "{:.3f}"),
     ("coverage", "{:.3f}"),
+    ("timely_coverage", "{:.3f}"),
+    ("partial_hide", "{:.3f}"),
+    ("stall_seconds", "{:.4f}"),
+    ("baseline_stall_seconds", "{:.4f}"),
+    ("stall_saved_pct", "{:.1f}"),
+    ("evictions", "{}"),
+    ("thrash_misses", "{}"),
     ("true_positives", "{}"),
     ("false_positives", "{}"),
     ("false_negatives", "{}"),
     ("table_bytes", "{}"),
     ("monitor_events", "{}"),
+    ("late_predictions", "{}"),
     ("train_seconds", "{:.4f}"),
 )
 
+#: every flattened ReplayResult field, in CSV column order
+CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
+    "evaluated",
+    "prefetch_loads",
+    "predictions",
+    "evicted_before_use",
+    "hidden_seconds",
+)
+
+
+def _fmt(value, fmt: str) -> str:
+    return "-" if value is None else fmt.format(value)
+
 
 def format_table(results: Sequence[ReplayResult]) -> str:
-    rows = [[fmt.format(r.row()[k]) for k, fmt in _COLUMNS] for r in results]
+    rows = [[_fmt(r.row()[k], fmt) for k, fmt in _COLUMNS] for r in results]
     header = [k for k, _ in _COLUMNS]
     widths = [max(len(h), *(len(row[i]) for row in rows)) if rows else len(h)
               for i, h in enumerate(header)]
@@ -292,6 +569,21 @@ def format_table(results: Sequence[ReplayResult]) -> str:
     for row in rows:
         lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
     return "\n".join(lines)
+
+
+def write_csv(results: Sequence[ReplayResult], path: str) -> str:
+    """Write the flattened result rows as a CSV artifact (undefined ratios
+    become empty cells, never phantom zeros)."""
+    import csv
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=list(CSV_COLUMNS), extrasaction="ignore")
+        writer.writeheader()
+        for r in results:
+            row = r.row()
+            writer.writerow({k: ("" if row.get(k) is None else row.get(k, "")) for k in CSV_COLUMNS})
+    return path
 
 
 def main(argv: Optional[list[str]] = None) -> None:
@@ -303,6 +595,11 @@ def main(argv: Optional[list[str]] = None) -> None:
     ap.add_argument("--modes", default=None,
                     help="comma-separated predictor names (default: all registered)")
     ap.add_argument("--rop-depth", type=int, default=2)
+    ap.add_argument("--cache-capacity", default="0",
+                    help="comma-separated per-DS cache capacities to sweep (0 = unbounded)")
+    ap.add_argument("--out", default="artifacts/predict",
+                    help="directory for the CSV artifact (replay.csv)")
+    ap.add_argument("--no-csv", action="store_true", help="print tables only")
     ap.add_argument("--fast", action="store_true",
                     help="only the three fastest-to-trace apps")
     args = ap.parse_args(argv)
@@ -310,8 +607,14 @@ def main(argv: Optional[list[str]] = None) -> None:
         a for a in args.apps.split(",") if a
     )
     modes = tuple(m for m in args.modes.split(",") if m) if args.modes else None
-    results = evaluate_apps(apps=apps, modes=modes, rop_depth=args.rop_depth)
+    capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
+    results = evaluate_apps(
+        apps=apps, modes=modes, rop_depth=args.rop_depth, cache_capacities=capacities
+    )
     print(format_table(results))
+    if not args.no_csv:
+        path = write_csv(results, os.path.join(args.out, "replay.csv"))
+        print(f"# wrote {path} ({len(results)} rows)")
 
 
 if __name__ == "__main__":

@@ -78,6 +78,9 @@ class Hybrid(Predictor):
             monitor_events=s.monitor_events + m.monitor_events,
             train_seconds=s.train_seconds + m.train_seconds,
             predictions=s.predictions + m.predictions,
+            late_predictions=s.late_predictions + m.late_predictions,
+            evicted_before_use=s.evicted_before_use + m.evicted_before_use,
+            hidden_seconds=s.hidden_seconds + m.hidden_seconds,
         )
 
     @overhead.setter

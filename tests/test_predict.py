@@ -107,21 +107,29 @@ def test_trace_reset_and_off_by_default(client):
 
 
 def test_prefetch_accuracy_empty_sets():
+    """Nothing prefetched, nothing accessed: both ratios are *undefined*,
+    not 0.0 — phantom zeros used to be indistinguishable from a measured
+    total miss."""
     acc = prefetch_accuracy(set(), set())
     assert acc["true_positives"] == 0
-    assert acc["precision"] == 0.0 and acc["recall"] == 0.0
+    assert acc["precision"] is None and acc["recall"] is None
+    assert acc["evaluated"] is False
 
 
 def test_prefetch_accuracy_all_false_positives():
     acc = prefetch_accuracy({1, 2, 3}, set())
     assert acc["false_positives"] == 3
-    assert acc["precision"] == 0.0 and acc["recall"] == 0.0
+    assert acc["precision"] == 0.0  # defined: 3 emissions, all useless
+    assert acc["recall"] is None  # undefined: nothing was ever accessed
+    assert acc["evaluated"] is True
 
 
 def test_prefetch_accuracy_all_false_negatives():
     acc = prefetch_accuracy(set(), {7, 8})
     assert acc["false_negatives"] == 2
-    assert acc["recall"] == 0.0
+    assert acc["recall"] == 0.0  # defined: 2 accesses, none prefetched
+    assert acc["precision"] is None  # undefined: the predictor emitted nothing
+    assert acc["evaluated"] is False
 
 
 def test_prefetch_accuracy_mixed_matches_store_method(client):

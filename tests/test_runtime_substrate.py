@@ -277,3 +277,31 @@ def test_compressed_allreduce_in_shard_map():
     env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
     out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=300)
     assert "COMPRESS-OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_compat_shard_map_runs_two_device_psum():
+    """The compat shim must resolve shard_map on whichever jax generation is
+    installed (jax.shard_map + check_vma on >= 0.6, the experimental import
+    + check_rep before) — this is the regression test for the shim itself,
+    independent of any model code built on top of it."""
+    import subprocess, sys, textwrap, os
+    from pathlib import Path
+
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.launch.compat import shard_map
+
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2,), ("x",))
+        f = shard_map(
+            lambda a: jax.lax.psum(a, "x"), mesh, in_specs=(P("x"),), out_specs=P()
+        )
+        out = f(jnp.arange(4.0))
+        np.testing.assert_allclose(np.asarray(out), [2.0, 4.0])
+        print("COMPAT-OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=300)
+    assert "COMPAT-OK" in out.stdout, out.stderr[-2000:]
