@@ -37,7 +37,7 @@ PREDICTOR_MODES = (
 )
 
 
-def run(reps: int = 3, apps=("bank", "wordcount", "kmeans"), modes=PREDICTOR_MODES,
+def run(reps: int = 3, apps=("bank", "bank_write", "wordcount", "kmeans"), modes=PREDICTOR_MODES,
         n_services: int = 4, parallel_workers: int = 16,
         cache_capacities=(0,)) -> list[BenchResult]:
     catalog = _catalog()
@@ -51,7 +51,9 @@ def run(reps: int = 3, apps=("bank", "wordcount", "kmeans"), modes=PREDICTOR_MOD
                 )
                 client.register(wl.build_app())
                 root = wl.populate(client.store)
-                # monitoring run: record the trace the miners train on
+                # monitoring run: record the event trace the miners train
+                # on (schema v2 — method entries, reads and writes; the
+                # miners normalize to the demand-oid sequence themselves)
                 warm_trace = None
                 if mode in ("markov-miner", "hybrid"):
                     client.store.trace = []
@@ -122,7 +124,7 @@ def main() -> None:
     ap.add_argument("--csv", default="artifacts/predict/bench.csv",
                     help="CSV artifact path ('' disables)")
     args = ap.parse_args()
-    apps = ("bank",) if args.fast else ("bank", "wordcount", "kmeans")
+    apps = ("bank",) if args.fast else ("bank", "bank_write", "wordcount", "kmeans")
     capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
     results = run(reps=args.reps, apps=apps, cache_capacities=capacities)
     print("name,us_per_call,derived")

@@ -15,7 +15,11 @@ the scoring loop), so equality-modulo-tolerance is a meaningful check:
     paper's claim), but every predictor is held to its baseline so a
     regression in a *baseline's* scoring is caught too;
   * ``stall_saved_pct`` is reported alongside for context (not gated:
-    it is derived from the same clock, gating both would double-count).
+    it is derived from the same clock, gating both would double-count);
+  * the write-path columns (``writes``, ``write_hits``, ``dirty_evictions``,
+    ``flushed_writes``) must be present in the fresh header, and any
+    baseline row that charged writes must keep a populated ``writes`` cell
+    — a harness that silently went write-blind fails the gate.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare_predict \
     artifacts/predict/replay.csv artifacts/predict/baseline.csv [--tolerance 0.02]
@@ -28,19 +32,32 @@ import sys
 
 Key = tuple[str, str, str, str]  # (app, workload, predictor, cache_capacity)
 
+#: the write-path columns the v2 trace schema added — a replay.csv missing
+#: them was produced by a pre-write-path harness and must fail the gate
+WRITE_COLUMNS = ("writes", "write_hits", "dirty_evictions", "flushed_writes")
 
-def _load(path: str) -> dict[Key, dict]:
+
+def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
     with open(path, newline="") as f:
-        rows = list(csv.DictReader(f))
-    return {
-        (r["app"], r["workload"], r["predictor"], r["cache_capacity"]): r for r in rows
-    }
+        reader = csv.DictReader(f)
+        rows = list(reader)
+        fields = list(reader.fieldnames or [])
+    return (
+        {(r["app"], r["workload"], r["predictor"], r["cache_capacity"]): r for r in rows},
+        fields,
+    )
 
 
 def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> list[str]:
     """Returns a list of human-readable regression messages (empty = pass)."""
-    current, baseline = _load(current_path), _load(baseline_path)
+    (current, cur_fields), (baseline, _) = _load(current_path), _load(baseline_path)
     failures: list[str] = []
+    missing_cols = [c for c in WRITE_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: write-path columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
     for key in sorted(baseline):
         app, workload, predictor, cap = key
         label = f"{app}/{workload}/{predictor}@cache={cap}"
@@ -62,6 +79,10 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> l
                 f"- {tolerance} (stall_saved {cur.get('stall_saved_pct')}% vs "
                 f"{baseline[key].get('stall_saved_pct')}%)"
             )
+        # the mutating rows must keep reporting the write path: a baseline
+        # row that charged writes cannot silently go write-blind
+        if baseline[key].get("writes") and not cur.get("writes"):
+            failures.append(f"{label}: writes cell is empty in {current_path}")
     return failures
 
 
@@ -79,7 +100,7 @@ def main(argv=None) -> int:
         for msg in failures:
             print(f"  {msg}")
         return 1
-    cur = _load(args.current)
+    cur, _ = _load(args.current)
     for (app, workload, pred, cap), r in sorted(cur.items()):
         if pred == "static-capre":
             print(f"ok {app}/{workload}/static-capre@cache={cap}: "

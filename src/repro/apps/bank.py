@@ -116,6 +116,38 @@ def build_bank_app() -> Application:
             ],
         )
     )
+    # public void creditAll(double bonus) {
+    #   for (Transaction trans : this.transactions) {
+    #     trans.amount = trans.amount + bonus;
+    #   }
+    # }
+    # One unconditional primitive-field write per transaction: the
+    # write-dense companion to setAllTransCustomers (whose updates are
+    # branch-dependent), used by the write-path accounting tests.
+    bank.add_method(
+        MethodDef(
+            "creditAll",
+            params=(("bonus", "double"),),
+            body=[
+                ForEach(
+                    "trans",
+                    This(),
+                    "transactions",
+                    [
+                        SetField(
+                            Var("trans"),
+                            "amount",
+                            Compute(
+                                lambda a, b: a + b,
+                                (Get(Var("trans"), "amount"), Var("bonus")),
+                                "plusBonus",
+                            ),
+                        )
+                    ],
+                )
+            ],
+        )
+    )
     # public void setAllTransCustomers() {
     #   for (Transaction trans : this.transactions) {
     #     trans.getAccount().setCustomer(this.manager);

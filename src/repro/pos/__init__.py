@@ -7,5 +7,6 @@ disk, in parallel across services.
 """
 
 from .latency import LatencyModel  # noqa: F401
+from .trace import TRACE_SCHEMA_VERSION, TraceEvent, as_events, trace_oids  # noqa: F401
 from .store import ObjectStore, PersistentObject  # noqa: F401
 from .client import POSClient, Session  # noqa: F401

@@ -89,8 +89,11 @@ class Session:
         self.app = reg.app
         self.config = config or SessionConfig()
         self.runtime = PrefetchRuntime(parallel_workers=self.config.parallel_workers)
-        self.store.miss_listener = None
-        self.store.access_listener = None
+        # Save whatever listeners are already installed (another session's
+        # monitoring) instead of clobbering them: a predictor bound below
+        # may overwrite them, and close() puts the saved ones back.  A
+        # mode=None session leaves the store's hooks entirely alone.
+        self._saved_listeners = (store.miss_listener, store.access_listener)
         self.predictor = None
         if self.config.mode is not None:
             from repro import predict
@@ -101,6 +104,8 @@ class Session:
     # -- injected prefetch scheduling (the paper's Listing 5 hook) -----------
 
     def on_method_entry(self, method_key: str, this_oid: int) -> None:
+        if self.store.trace is not None:
+            self.store.trace_method_entry(method_key, this_oid)
         if self.predictor is not None:
             self.predictor.on_method_entry(method_key, this_oid)
 
@@ -115,9 +120,17 @@ class Session:
 
     def close(self) -> None:
         if self.predictor is not None:
+            # removes only the listeners this session's predictor installed
             self.predictor.unbind()
-        self.store.miss_listener = None
-        self.store.access_listener = None
+        for attr, saved in zip(("miss_listener", "access_listener"), self._saved_listeners):
+            if saved is None or getattr(self.store, attr) is not None:
+                continue
+            # never resurrect a hook whose predictor has since unbound
+            # (sessions closed out of LIFO order): a dead miner's listener
+            # would silently keep charging monitoring on every access
+            owner = getattr(saved, "predictor", None)
+            if owner is None or owner.session is not None:
+                setattr(self.store, attr, saved)
         self.runtime.shutdown()
 
     def __enter__(self):

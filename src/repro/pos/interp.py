@@ -9,8 +9,10 @@ dataClay's Data Services:
   * on entry to a registered method the injected scheduling submits the
     generated prefetch method to the background executor (Listing 5) — the
     ``Session`` decides per the configured prefetch mode;
-  * primitive field reads/writes touch the already-loaded payload; writes
-    also pay the store's write-back cost (what dominates OO7's t2 traversals);
+  * primitive field reads touch the already-loaded payload; writes go
+    through ``ObjectStore.app_write`` — write-allocate through the owning
+    Data Service's cache, dirty bit, deferred write-back on eviction (what
+    dominates OO7's t2 traversals under bounded caches);
   * dynamic dispatch resolves methods from the *runtime* class, so
     polymorphic schemas (OO7 assemblies) behave exactly like in Java.
 """
@@ -161,7 +163,9 @@ class Interpreter:
         else:
             rec.fields[s.field] = val
         if not self._is_volatile(obj.oid):
-            self.store.app_write(obj.oid)
+            # a write is a demand access: it redirects execution to the
+            # owning Data Service and write-allocates through its cache
+            self.store.app_write(obj.oid, ctx)
 
     # -- expressions -----------------------------------------------------------
 

@@ -64,19 +64,32 @@ class VirtualDisk:
         self.latency = latency
         self._slots = [0.0] * max(1, latency.parallel_per_ds)
         self.loads = 0
+        self.write_backs = 0
         self.busy_seconds = 0.0
+
+    def _occupy(self, t: float, seconds: float) -> tuple[float, float]:
+        i = min(range(len(self._slots)), key=self._slots.__getitem__)
+        start = max(t, self._slots[i])
+        done = start + seconds
+        self._slots[i] = done
+        self.busy_seconds += seconds
+        return start, done
 
     def schedule(self, t: float) -> tuple[float, float]:
         """Schedule one disk load requested at virtual time ``t``; returns
         ``(start, done)``.  The load takes the earliest-free slot: it starts
         at ``max(t, slot_free)`` and completes ``disk_load`` later."""
-        i = min(range(len(self._slots)), key=self._slots.__getitem__)
-        start = max(t, self._slots[i])
-        done = start + self.latency.disk_load
-        self._slots[i] = done
         self.loads += 1
-        self.busy_seconds += self.latency.disk_load
-        return start, done
+        return self._occupy(t, self.latency.disk_load)
+
+    def schedule_write_back(self, t: float) -> tuple[float, float]:
+        """Schedule one write-back (dirty-eviction flush) requested at
+        virtual time ``t``.  Write-backs occupy the *same* service slots as
+        loads for ``write_back`` seconds — the flush itself is off the
+        application's critical path, but it delays whatever loads queue
+        behind it, which is how the replay charges the write path."""
+        self.write_backs += 1
+        return self._occupy(t, self.latency.write_back)
 
 
 # Constants used by the offline replay engine: the paper's HDD regime, where

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Any, Iterable, Optional
 
 from .latency import LatencyModel, ZERO
+from .trace import TraceEvent, access_event, write_event, method_entry_event
 
 
 @dataclass
@@ -47,16 +48,52 @@ class DataService:
         # request coalescing: concurrent loads of the same object share one
         # disk read — the second requester waits out the remaining latency
         self._inflight: dict[int, threading.Event] = {}
+        # write-back cache state: updated-in-memory objects whose disk copy
+        # is stale; flushed (paying ``latency.write_back``) on eviction and
+        # on ``drop_cache``, never on the write itself
+        self.dirty: set[int] = set()
         self.evictions = 0
+        self.dirty_evictions = 0
+        self.flushed_writes = 0
+        # set by the owning ObjectStore so flush/eviction events land on
+        # the shared StoreMetrics too (None for a standalone DataService)
+        self._owner: Optional["ObjectStore"] = None
 
-    def _touch(self, oid: int) -> None:
-        """LRU bump + bounded-capacity eviction (callers hold the lock)."""
+    def _touch(self, oid: int) -> Optional[int]:
+        """LRU bump + bounded-capacity eviction (callers hold the lock).
+        Returns a dirty victim oid that now needs flushing (the caller
+        flushes *after* releasing the lock), or None."""
         self.cache.pop(oid, None)
         self.cache[oid] = None
         if self.cache_capacity and len(self.cache) > self.cache_capacity:
             victim = next(iter(self.cache))
             del self.cache[victim]
             self.evictions += 1
+            if victim in self.dirty:
+                self.dirty.discard(victim)
+                self.dirty_evictions += 1
+                if self._owner is not None:
+                    self._owner._note_dirty_eviction()
+                return victim
+        return None
+
+    def _flush(self, oid: int) -> None:
+        """Write a dirty object back to disk (occupies a disk slot for
+        ``write_back`` seconds — the deferred cost of the write path)."""
+        with self._slots:
+            self.latency.sleep(self.latency.write_back)
+        self.flushed_writes += 1
+        if self._owner is not None:
+            self._owner._note_flush()
+
+    def reset_counters(self) -> None:
+        """Zero the per-service counters (between benchmark repetitions) —
+        previously ``evictions`` survived ``reset_runtime_state`` and
+        accumulated across reps, polluting every thrash-sweep row after
+        the first."""
+        self.evictions = 0
+        self.dirty_evictions = 0
+        self.flushed_writes = 0
 
     def is_cached(self, oid: int) -> bool:
         with self._cache_lock:
@@ -66,17 +103,25 @@ class DataService:
         """Disk -> memory. Returns True if this call performed the disk load
         (False: cached, or coalesced onto an in-flight load)."""
         while True:
+            victim = None
             with self._cache_lock:
                 if oid in self.cache:
-                    self._touch(oid)
-                    return False
-                ev = self._inflight.get(oid)
-                if ev is None:
-                    ev = threading.Event()
-                    self._inflight[oid] = ev
-                    owner = True
+                    victim = self._touch(oid)
+                    hit = True
                 else:
-                    owner = False
+                    hit = False
+                    ev = self._inflight.get(oid)
+                    if ev is None:
+                        ev = threading.Event()
+                        self._inflight[oid] = ev
+                        owner = True
+                    else:
+                        owner = False
+            if hit:
+                if victim is not None:
+                    # flushing sleeps on a disk slot: never under the lock
+                    self._flush(victim)
+                return False
             if owner:
                 break
             ev.wait(timeout=5.0)
@@ -91,20 +136,31 @@ class DataService:
                     # the owner signalled but never landed the load: clear
                     # the stale entry so the next pass can take ownership
                     self._inflight.pop(oid, None)
+        victim = None
         try:
             with self._slots:
                 self.latency.sleep(self.latency.disk_load)
             with self._cache_lock:
-                self._touch(oid)
+                victim = self._touch(oid)
         finally:
             with self._cache_lock:
                 self._inflight.pop(oid, None)
             ev.set()
+        if victim is not None:
+            self._flush(victim)
         return True
 
-    def write_back(self, oid: int) -> None:
-        with self._slots:
-            self.latency.sleep(self.latency.write_back)
+    def write(self, oid: int) -> bool:
+        """Write-allocate + write-back: ensure the object is in memory (a
+        write to an uncached object performs the disk load and counts as a
+        miss) and mark it dirty.  The ``write_back`` latency is deferred to
+        eviction / ``drop_cache``, when the dirty line is flushed.  Returns
+        True if this write performed the allocating disk load."""
+        did_load = self.load_into_memory(oid)
+        with self._cache_lock:
+            if oid in self.cache:  # unless concurrently evicted already
+                self.dirty.add(oid)
+        return did_load
 
     def drop_cache(self) -> None:
         with self._cache_lock:
@@ -112,6 +168,9 @@ class DataService:
             for ev in self._inflight.values():
                 ev.set()
             self._inflight.clear()
+            dirty, self.dirty = self.dirty, set()
+        for oid in dirty:
+            self._flush(oid)
 
 
 def prefetch_accuracy(prefetched: set, accessed: set) -> dict:
@@ -144,6 +203,9 @@ class StoreMetrics:
     app_cache_misses: int = 0
     remote_hops: int = 0
     writes: int = 0
+    write_hits: int = 0  # writes that found the object already in memory
+    dirty_evictions: int = 0  # evictions that had to flush a dirty object
+    flushed_writes: int = 0  # write-backs actually performed (evict + drop)
     prefetch_loads: int = 0  # disk loads performed by prefetch threads
     prefetch_requests: int = 0  # objects prefetch looked at (incl. cache hits)
 
@@ -169,6 +231,8 @@ class ObjectStore:
         self.services = [
             DataService(i, latency, cache_capacity) for i in range(n_services)
         ]
+        for ds in self.services:
+            ds._owner = self
         self._placement: dict[int, int] = {}  # oid -> ds_id
         self._oid_counter = itertools.count(1)
         self._rr = itertools.count()
@@ -177,7 +241,9 @@ class ObjectStore:
         # accuracy accounting (true/false positives of prefetching)
         self.accessed_oids: set[int] = set()
         self.prefetched_oids: set[int] = set()
-        self.trace: Optional[list[int]] = None  # set to [] to record accesses
+        # set to [] to record the application's event stream as schema-v2
+        # TraceEvent records (access / write / method_entry — pos.trace)
+        self.trace: Optional[list[TraceEvent]] = None
         # optional callback fired on every application-path cache miss —
         # how the ROP baseline hooks its eager referenced-object fetch
         self.miss_listener = None
@@ -211,16 +277,29 @@ class ObjectStore:
 
     # -- application-path access -------------------------------------------
 
+    def _redirect(self, ctx: Optional[ExecutionContext], ds: DataService) -> None:
+        """Charge execution redirection if the application thread is not
+        already on the owning Data Service."""
+        if ctx is not None and ctx.current_ds != ds.ds_id:
+            self.latency.sleep(self.latency.remote_hop)
+            ctx.current_ds = ds.ds_id
+            with self._metrics_lock:
+                self.metrics.remote_hops += 1
+
+    def _notify(self, oid: int, did_load: bool) -> None:
+        """Fire the demand-path listeners (shared by reads and writes, so
+        the monitoring family observes the full get/put stream)."""
+        if did_load and self.miss_listener is not None:
+            self.miss_listener(oid)
+        if self.access_listener is not None:
+            self.access_listener(oid)
+
     def app_access(self, ctx: ExecutionContext, oid: int) -> PersistentObject:
         """Navigate to ``oid`` on the application thread: redirect execution
         to the owning Data Service if needed, then ensure the object is in
         that service's memory."""
         ds = self.service_of(oid)
-        if ctx.current_ds != ds.ds_id:
-            self.latency.sleep(self.latency.remote_hop)
-            ctx.current_ds = ds.ds_id
-            with self._metrics_lock:
-                self.metrics.remote_hops += 1
+        self._redirect(ctx, ds)
         did_load = ds.load_into_memory(oid)
         with self._metrics_lock:
             self.metrics.app_loads += 1
@@ -230,19 +309,51 @@ class ObjectStore:
                 self.metrics.app_cache_hits += 1
             self.accessed_oids.add(oid)
             if self.trace is not None:
-                self.trace.append(oid)
-        if did_load and self.miss_listener is not None:
-            self.miss_listener(oid)
-        if self.access_listener is not None:
-            self.access_listener(oid)
+                self.trace.append(access_event(oid))
+        self._notify(oid, did_load)
         self.latency.sleep(self.latency.think)
         return ds.disk[oid]
 
-    def app_write(self, oid: int) -> None:
+    def app_write(self, oid: int, ctx: Optional[ExecutionContext] = None) -> None:
+        """Update ``oid`` on the application thread.  Writes are demand
+        accesses like any other: execution redirects to the owning Data
+        Service, an uncached object is write-allocated (the disk load counts
+        as a miss), the dirty bit defers ``write_back`` to eviction/flush,
+        and the access is visible to tracing, ``accessed_oids`` and the
+        listeners — previously all of this was bypassed and mutating
+        workloads undercounted demand."""
         ds = self.service_of(oid)
-        ds.write_back(oid)
+        self._redirect(ctx, ds)
+        did_load = ds.write(oid)
         with self._metrics_lock:
             self.metrics.writes += 1
+            if did_load:
+                self.metrics.app_cache_misses += 1
+            else:
+                self.metrics.write_hits += 1
+            self.accessed_oids.add(oid)
+            if self.trace is not None:
+                self.trace.append(write_event(oid))
+        self._notify(oid, did_load)
+        # per-object application processing charges on writes exactly like
+        # reads — the virtual-clock replay does the same, keeping the two
+        # timelines comparable
+        self.latency.sleep(self.latency.think)
+
+    def trace_method_entry(self, method_key: str, oid: int) -> None:
+        """Record entry into a registered method (the injected scheduling
+        point) in the event trace — no cost, pure bookkeeping."""
+        with self._metrics_lock:
+            if self.trace is not None:
+                self.trace.append(method_entry_event(method_key, oid))
+
+    def _note_dirty_eviction(self) -> None:
+        with self._metrics_lock:
+            self.metrics.dirty_evictions += 1
+
+    def _note_flush(self) -> None:
+        with self._metrics_lock:
+            self.metrics.flushed_writes += 1
 
     # -- prefetch-path access ----------------------------------------------
 
@@ -265,9 +376,13 @@ class ObjectStore:
     # -- bookkeeping ---------------------------------------------------------
 
     def reset_runtime_state(self) -> None:
-        """Drop all caches and counters (between benchmark repetitions)."""
+        """Drop all caches and counters (between benchmark repetitions).
+        ``drop_cache`` flushes dirty write-back state first; the per-service
+        counters (``evictions`` et al.) are then zeroed too — they used to
+        survive resets and accumulate across repetitions."""
         for ds in self.services:
             ds.drop_cache()
+            ds.reset_counters()
         with self._metrics_lock:
             self.metrics = StoreMetrics()
             self.accessed_oids = set()

@@ -80,13 +80,15 @@ class Predictor:
         self.store = None  # ObjectStore (bound or attached for replay)
         self.reg = None  # pos.client.RegisteredApp (schema + analysis)
         self.overhead = Overhead()
+        self._installed_listeners: list[tuple[str, object]] = []
 
     # -- lifecycle ---------------------------------------------------------
 
-    def warm(self, trace: Sequence[int]) -> None:
-        """Consume a recorded access trace (``ObjectStore.trace``) before
-        prediction starts.  Static strategies ignore it; trace miners build
-        their tables here and charge ``overhead.train_seconds`` /
+    def warm(self, trace: Sequence) -> None:
+        """Consume a recorded trace (``ObjectStore.trace``: schema-v2
+        ``TraceEvent`` records, or a legacy bare-oid list) before prediction
+        starts.  Static strategies ignore it; trace miners build their
+        tables here and charge ``overhead.train_seconds`` /
         ``overhead.table_bytes``."""
 
     def attach(self, store, reg) -> None:
@@ -102,14 +104,27 @@ class Predictor:
         self.session = session
         self.attach(session.store, session.reg)
 
+    def _listen(self, store, attr: str, fn) -> None:
+        """Install a store listener and remember it as ours, so unbind can
+        remove exactly what this predictor installed — and nothing another
+        session's predictor owns.  The callable is tagged with its owning
+        predictor so ``Session.close`` can refuse to resurrect a hook whose
+        predictor has since unbound (``fn`` must accept attributes — pass a
+        lambda, not a bound method)."""
+        fn.predictor = self
+        setattr(store, attr, fn)
+        self._installed_listeners.append((attr, fn))
+
     def unbind(self) -> None:
-        """Detach from the session (Session.close)."""
+        """Detach from the session (Session.close): remove only the
+        listeners this predictor installed (if still in place — a later
+        session may have legitimately replaced them)."""
         if self.session is not None:
             store = self.session.store
-            if store.miss_listener is not None:
-                store.miss_listener = None
-            if store.access_listener is not None:
-                store.access_listener = None
+            for attr, fn in self._installed_listeners:
+                if getattr(store, attr) is fn:
+                    setattr(store, attr, None)
+        self._installed_listeners = []
         self.session = None
 
     # -- prediction entry points ------------------------------------------
@@ -125,6 +140,13 @@ class Predictor:
         hook).  Returns the oids predicted to be accessed next; when
         bound, also schedules their prefetch."""
         return []
+
+    def on_write(self, oid: int, cls: str) -> list[int]:
+        """Called on every application-path field update.  Writes are
+        demand accesses (write-allocate), so by default they feed the same
+        monitoring hook as reads — Palpatine-style miners observe the full
+        get/put stream.  Override to treat updates differently."""
+        return self.on_access(oid, cls)
 
     def on_miss(self, oid: int) -> list[int]:
         """Called on application-path cache misses only (the ROP hook)."""

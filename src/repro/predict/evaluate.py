@@ -4,11 +4,12 @@ Turns ``ObjectStore.trace`` from a debugging aid into the substrate for a
 head-to-head comparison of every registered predictor:
 
   1. **record** — run a benchmark workload with prefetching off, capturing
-     the interleaved stream of method entries (the injected scheduling
-     points) and application-path object accesses; two cold-cache runs are
-     recorded so trace miners can train on the first and be scored on the
-     second (the warm-up run a monitoring approach needs anyway).  The five
-     apps record concurrently on a thread pool — each gets its own store.
+     the interleaved schema-v2 event stream (``pos.trace``): method entries
+     (the injected scheduling points), application-path reads *and* writes;
+     two cold-cache runs are recorded so trace miners can train on the
+     first and be scored on the second (the warm-up run a monitoring
+     approach needs anyway).  The apps record concurrently on a thread
+     pool — each gets its own store.
   2. **replay** — feed the eval run's events to a fresh instance of each
      predictor under a **virtual clock** driven by the pure-arithmetic side
      of ``pos.latency``: every predicted oid is scheduled on its Data
@@ -22,12 +23,19 @@ head-to-head comparison of every registered predictor:
      predicted before the access, latency ignored), and the timeliness
      metrics the paper's argument actually rests on:
 
-     * ``timely_coverage`` — fraction of accesses whose oid was predicted
-       AND resident (ready-at <= needed-at) when the access happened;
+     * ``timely_coverage`` — fraction of demand events (reads and writes)
+       whose oid was predicted AND resident (ready-at <= needed-at);
      * ``partial_hide``    — fraction whose predicted load was still in
        flight at need (the app stalls for the remainder only);
      * ``stall_seconds``   — simulated disk wait on the app critical path,
        alongside the no-prefetch baseline and the percentage saved.
+
+     Writes are charged end-to-end: an uncached write is write-allocated
+     (a demand load on the virtual clock), a resident write dirties its
+     cache line, and evicting a dirty line schedules ``write_back``
+     occupancy on the same ``VirtualDisk`` slots loads use — so mutating
+     workloads (``bank_write`` = the paper's ``setAllTransCustomers``)
+     are scored for timeliness too.
 
 Replay is fully deterministic (no real sleeping, no real threads in the
 scoring loop), so the CSV artifacts written under ``artifacts/predict/``
@@ -48,6 +56,15 @@ from typing import Callable, Optional, Sequence
 from repro.pos.client import POSClient, Session, SessionConfig
 from repro.pos.latency import REPLAY, LatencyModel, VirtualDisk
 from repro.pos.store import prefetch_accuracy
+from repro.pos.trace import (
+    ACCESS,
+    METHOD_ENTRY,
+    TRACE_SCHEMA_VERSION,
+    WRITE,
+    TraceEvent,
+    as_events,
+    trace_oids,
+)
 
 from . import available, make_pos_predictor
 from .base import Predictor
@@ -60,45 +77,38 @@ from .base import Predictor
 
 @dataclass
 class RecordedTrace:
-    """One cold-cache run of a workload: the interleaved event stream plus
-    the plain oid trace (== what ``ObjectStore.trace`` recorded)."""
+    """One cold-cache run of a workload: the interleaved schema-v2 event
+    stream (``pos.trace.TraceEvent``: access / write / method_entry) plus
+    the plain demand-oid sequence for bare-oid consumers (miners' ``warm``,
+    accuracy sets)."""
 
     app_name: str
     workload: str
-    events: list[tuple]  # ("enter", method_key, oid) | ("access", oid)
-    accesses: list[int]
+    events: list[TraceEvent]
+    accesses: list[int]  # demand-path oids (reads + writes), in order
+    schema_version: int = TRACE_SCHEMA_VERSION
 
     def __len__(self) -> int:
         return len(self.events)
 
 
-class TraceRecorder(Predictor):
-    """A predictor that predicts nothing and writes down everything —
-    plugged into a Session to capture the replayable event stream."""
-
-    def __init__(self):
-        super().__init__()
-        self.events: list[tuple] = []
-
-    def bind(self, session) -> None:
-        super().bind(session)
-        session.store.access_listener = lambda oid: self.events.append(("access", oid))
-
-    def on_method_entry(self, method_key: str, this_oid: int) -> list[int]:
-        self.events.append(("enter", method_key, this_oid))
-        return []
-
-
 @dataclass
 class Workload:
     """A benchmark app + a traversal to trace, in the same shape the
-    benchmark driver uses (``run_once(session, root)``)."""
+    benchmark driver uses (``run_once(session, root)``).  ``key`` names the
+    catalog entry (distinct traversals of one app — e.g. ``bank`` vs
+    ``bank_write`` — share ``name``, the registered application)."""
 
     name: str
     build_app: Callable
     populate: Callable[[object], int]
     run_once: Callable[[Session, int], None]
     workload: str = "run"
+    key: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.key:
+            self.key = self.name
 
 
 def _catalog() -> dict[str, Workload]:
@@ -117,6 +127,16 @@ def _catalog() -> dict[str, Workload]:
             lambda store: populate_bank_store(store, n_transactions=60),
             lambda s, root: s.execute(root, "auditAll"),
             workload="auditAll",
+        ),
+        # the mutating traversal (paper Listing 1): getAccount navigation +
+        # conditional account.cust updates — the write path under test
+        "bank_write": Workload(
+            "bank",
+            build_bank_app,
+            lambda store: populate_bank_store(store, n_transactions=60),
+            lambda s, root: s.execute(root, "setAllTransCustomers"),
+            workload="setAllTransCustomers",
+            key="bank_write",
         ),
         "wordcount": Workload(
             "wordcount",
@@ -156,8 +176,13 @@ def record_workload(
     wl: Workload, runs: int = 2, n_services: int = 4
 ) -> tuple[POSClient, int, list[RecordedTrace]]:
     """Populate a zero-latency store and record ``runs`` cold-cache traces
-    of the workload with prefetching off.  Returns the live client (replay
-    needs the object graph and the registration analysis) plus the traces."""
+    of the workload with prefetching off.  ``ObjectStore.trace`` captures
+    the full schema-v2 event stream (method entries via the Session hook,
+    reads via ``app_access``, writes via ``app_write``).  Returns the live
+    client (replay needs the object graph and the registration analysis)
+    plus the traces.  For mutating workloads the train run's updates are
+    visible to the eval run — exactly the warm-store regime a monitoring
+    predictor trains in."""
     client = POSClient(n_services=n_services)
     client.register(wl.build_app())
     root = wl.populate(client.store)
@@ -166,19 +191,17 @@ def record_workload(
         client.store.reset_runtime_state()
         client.store.trace = []
         session = Session(client.store, client.logic_module.registered[wl.name])
-        recorder = TraceRecorder()
-        recorder.bind(session)
-        session.predictor = recorder
         try:
             wl.run_once(session, root)
         finally:
             session.close()
+        events = list(client.store.trace)
         traces.append(
             RecordedTrace(
                 app_name=wl.name,
                 workload=wl.workload,
-                events=list(recorder.events),
-                accesses=list(client.store.trace),
+                events=events,
+                accesses=trace_oids(events),
             )
         )
         client.store.trace = None
@@ -193,12 +216,12 @@ def record_catalog(
     zero-latency store the interpreter is CPU-bound and the GIL caps the
     overlap; the pool pays off when recording is given a sleeping latency
     model (and costs nothing but threads otherwise).  Returns
-    ``{app_name: (client, root, traces)}`` in the order requested."""
+    ``{workload_key: (client, root, traces)}`` in the order requested."""
     if max_workers is None:
         max_workers = max(1, len(workloads))
     with ThreadPoolExecutor(max_workers=max_workers) as pool:
-        futures = {wl.name: pool.submit(record_workload, wl, runs) for wl in workloads}
-        return {name: fut.result() for name, fut in futures.items()}
+        futures = {wl.key: pool.submit(record_workload, wl, runs) for wl in workloads}
+        return {key: fut.result() for key, fut in futures.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +233,7 @@ def record_catalog(
 class _CacheEntry:
     source: str  # "pf" | "demand"
     used: bool = False
+    dirty: bool = False
 
 
 class VirtualReplay:
@@ -221,7 +245,10 @@ class VirtualReplay:
     is stored (no redirection charged); a demand miss queues on the same
     disk slots the prefetches occupy, so over-eager predictors congest the
     application's own loads; concurrent interest in one oid coalesces onto
-    the in-flight load."""
+    the in-flight load.  Writes write-allocate (an uncached write is a
+    demand load), dirty their cache line, and evicting a dirty line
+    schedules ``write_back`` occupancy on the same disk slots — off the
+    app's critical path, but delaying loads queued behind it."""
 
     def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0):
         n = len(store.services)
@@ -233,7 +260,7 @@ class VirtualReplay:
         self.inflight: list[dict[int, tuple[float, float]]] = [{} for _ in range(n)]
         self.t = 0.0
         self.cur_ds: Optional[int] = None
-        # counters
+        # counters (n_access counts every demand event, reads and writes)
         self.n_access = 0
         self.timely = 0
         self.partial = 0
@@ -246,6 +273,10 @@ class VirtualReplay:
         self.evictions = 0
         self.evicted_before_use = 0
         self.thrash_misses = 0
+        self.writes = 0
+        self.write_hits = 0  # writes that found the line resident
+        self.dirty_evictions = 0
+        self.flushed_writes = 0
         self._evicted_ever: set[int] = set()
 
     # -- cache mechanics ----------------------------------------------------
@@ -271,6 +302,12 @@ class VirtualReplay:
             self._evicted_ever.add(victim_oid)
             if victim.source == "pf" and not victim.used:
                 self.evicted_before_use += 1
+            if victim.dirty:
+                # the deferred cost of the write path: the flush occupies a
+                # disk slot now, delaying whatever loads queue behind it
+                self.dirty_evictions += 1
+                self.flushed_writes += 1
+                self.disks[ds_i].schedule_write_back(self.t)
 
     # -- the two event kinds -------------------------------------------------
 
@@ -292,9 +329,12 @@ class VirtualReplay:
             self.inflight[ds_i][oid] = self.disks[ds_i].schedule(self.t)
             self.prefetch_loads += 1
 
-    def access(self, oid: int) -> None:
-        """Application accesses ``oid``: redirect execution if needed, then
-        wait out whatever part of the disk load prefetching did not hide."""
+    def access(self, oid: int, write: bool = False) -> None:
+        """Application touches ``oid`` (read navigation, or field update
+        when ``write``): redirect execution if needed, then wait out
+        whatever part of the disk load prefetching did not hide.  A write
+        to an uncached object write-allocates — the same demand load a read
+        pays — and always leaves the line dirty."""
         ds_i = self.store.service_of(oid).ds_id
         if self.cur_ds != ds_i:
             self.t += self.latency.remote_hop
@@ -302,6 +342,8 @@ class VirtualReplay:
             self.remote_hops += 1
         self._materialize(ds_i, self.t)
         self.n_access += 1
+        if write:
+            self.writes += 1
         needed_at = self.t
         cache = self.caches[ds_i]
         entry = cache.get(oid)
@@ -315,6 +357,8 @@ class VirtualReplay:
                     self.hidden_seconds += self.latency.disk_load
                 self.timely += 1
             entry.used = True
+            if write:
+                self.write_hits += 1
         elif oid in self.inflight[ds_i]:
             # predicted, still in flight: the app waits out the remainder
             _start, done = self.inflight[ds_i].pop(oid)
@@ -324,6 +368,7 @@ class VirtualReplay:
             self.t = done
             self.partial += 1
             self._insert(ds_i, oid, "pf", used=True)
+            entry = self.caches[ds_i].get(oid)
         else:
             # unpredicted (or evicted): full demand load, queueing behind
             # whatever the prefetcher has piled onto this service's disk
@@ -334,7 +379,13 @@ class VirtualReplay:
             if oid in self._evicted_ever:
                 self.thrash_misses += 1
             self._insert(ds_i, oid, "demand", used=True)
+            entry = self.caches[ds_i].get(oid)
+        if write and entry is not None:
+            entry.dirty = True
         self.t += self.latency.think
+
+    def write(self, oid: int) -> None:
+        self.access(oid, write=True)
 
 
 @dataclass
@@ -358,6 +409,10 @@ class ReplayResult:
     evictions: int
     thrash_misses: int
     prefetch_loads: int
+    writes: int
+    write_hits: int
+    dirty_evictions: int
+    flushed_writes: int
     overhead: dict = field(default_factory=dict)
 
     def row(self) -> dict:
@@ -369,12 +424,15 @@ class ReplayResult:
 def replay_baseline(
     trace: RecordedTrace, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0
 ) -> VirtualReplay:
-    """The no-prefetch reference: every cold (or thrashed-out) access pays
-    the full disk load.  Same trace, same clock, no predictions."""
+    """The no-prefetch reference: every cold (or thrashed-out) demand event
+    pays the full disk load (writes included — write-allocate + dirty
+    evictions).  Same trace, same clock, no predictions."""
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity)
-    for ev in trace.events:
-        if ev[0] == "access":
-            engine.access(ev[1])
+    for ev in as_events(trace.events):
+        if ev.kind == ACCESS:
+            engine.access(ev.oid)
+        elif ev.kind == WRITE:
+            engine.write(ev.oid)
     return engine
 
 
@@ -394,20 +452,23 @@ def replay(
     predicted: set[int] = set()
     accessed: set[int] = set()
     n_access, covered = 0, 0
-    for ev in trace.events:
-        if ev[0] == "enter":
-            _, key, oid = ev
-            out = predictor.on_method_entry(key, oid)
+    for ev in as_events(trace.events):
+        if ev.kind == METHOD_ENTRY:
+            out = predictor.on_method_entry(ev.method_key, ev.oid)
             predicted.update(out)
             engine.predict(out)
         else:
-            oid = ev[1]
+            oid = ev.oid
             n_access += 1
             if oid in predicted:
                 covered += 1
             accessed.add(oid)
-            engine.access(oid)
-            out = predictor.on_access(oid, store.cls_of(oid))
+            if ev.kind == WRITE:
+                engine.write(oid)
+                out = predictor.on_write(oid, store.cls_of(oid))
+            else:
+                engine.access(oid)
+                out = predictor.on_access(oid, store.cls_of(oid))
             predicted.update(out)
             engine.predict(out)
     if baseline_stall_seconds is None:
@@ -446,6 +507,10 @@ def replay(
         evictions=engine.evictions,
         thrash_misses=engine.thrash_misses,
         prefetch_loads=engine.prefetch_loads,
+        writes=engine.writes,
+        write_hits=engine.write_hits,
+        dirty_evictions=engine.dirty_evictions,
+        flushed_writes=engine.flushed_writes,
         overhead=overhead,
     )
 
@@ -491,7 +556,7 @@ def evaluate_workload(
 
 
 def evaluate_apps(
-    apps: Sequence[str] = ("bank", "wordcount", "kmeans"),
+    apps: Sequence[str] = ("bank", "bank_write", "wordcount", "kmeans"),
     modes: Optional[Sequence[str]] = None,
     rop_depth: int = 2,
     cache_capacities: Sequence[int] = (0,),
@@ -537,6 +602,9 @@ _COLUMNS = (
     ("stall_saved_pct", "{:.1f}"),
     ("evictions", "{}"),
     ("thrash_misses", "{}"),
+    ("writes", "{}"),
+    ("write_hits", "{}"),
+    ("flushed_writes", "{}"),
     ("true_positives", "{}"),
     ("false_positives", "{}"),
     ("false_negatives", "{}"),
@@ -553,6 +621,7 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     "predictions",
     "evicted_before_use",
     "hidden_seconds",
+    "dirty_evictions",
 )
 
 
@@ -590,7 +659,7 @@ def main(argv: Optional[list[str]] = None) -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--apps", default="bank,wordcount,kmeans,oo7,pga",
+    ap.add_argument("--apps", default="bank,bank_write,wordcount,kmeans,oo7,pga",
                     help="comma-separated app names from the catalog")
     ap.add_argument("--modes", default=None,
                     help="comma-separated predictor names (default: all registered)")
@@ -601,9 +670,9 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="directory for the CSV artifact (replay.csv)")
     ap.add_argument("--no-csv", action="store_true", help="print tables only")
     ap.add_argument("--fast", action="store_true",
-                    help="only the three fastest-to-trace apps")
+                    help="only the fastest-to-trace apps (incl. the mutating bank run)")
     args = ap.parse_args(argv)
-    apps = ("bank", "wordcount", "kmeans") if args.fast else tuple(
+    apps = ("bank", "bank_write", "wordcount", "kmeans") if args.fast else tuple(
         a for a in args.apps.split(",") if a
     )
     modes = tuple(m for m in args.modes.split(",") if m) if args.modes else None

@@ -51,7 +51,7 @@ class Hybrid(Predictor):
         Predictor.bind(self, session)
         self.static.session = session
         self.miner.session = session
-        session.store.access_listener = lambda oid: self.on_access(oid, None)
+        self._listen(session.store, "access_listener", lambda oid: self.on_access(oid, None))
         if session.config is not None and session.config.warm_trace:
             self.miner.warm(session.config.warm_trace)
 

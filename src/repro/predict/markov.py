@@ -27,6 +27,8 @@ import time
 from collections import Counter, deque
 from typing import Optional, Sequence
 
+from repro.pos.trace import trace_oids
+
 from .base import Predictor, table_bytes
 
 
@@ -54,9 +56,13 @@ class MarkovMiner(Predictor):
 
     # -- mining -------------------------------------------------------------
 
-    def warm(self, trace: Sequence[int]) -> None:
+    def warm(self, trace: Sequence) -> None:
         t0 = time.perf_counter()
-        trace = list(trace)
+        # schema-v2 event traces carry writes and method entries; the miner
+        # trains on the demand-path oid sequence (reads AND writes — the
+        # Palpatine regime mines full get/put streams).  Bare-oid lists
+        # pass through unchanged.
+        trace = trace_oids(trace)
         for i in range(1, len(trace)):
             succ = trace[i]
             lo = max(0, i - self.order)
@@ -118,8 +124,7 @@ class MarkovMiner(Predictor):
 
     def bind(self, session) -> None:
         super().bind(session)
-        store = session.store
-        store.access_listener = lambda oid: self.on_access(oid, None)
+        self._listen(session.store, "access_listener", lambda oid: self.on_access(oid, None))
         if session.config is not None and session.config.warm_trace:
             self.warm(session.config.warm_trace)
 

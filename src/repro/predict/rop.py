@@ -37,7 +37,7 @@ class Rop(Predictor):
 
     def bind(self, session) -> None:
         super().bind(session)
-        session.store.miss_listener = self.on_miss
+        self._listen(session.store, "miss_listener", lambda oid: self.on_miss(oid))
 
     # -- the BFS expansion (shared online/offline) --------------------------
 

@@ -74,11 +74,17 @@ def test_all_registered_modes_run_live(client):
 
 
 def test_trace_records_accesses_in_navigation_order(client):
+    from repro.pos.trace import trace_oids
+
     root = populate_bank_store(client.store, n_transactions=10)
     client.store.trace = []
     with client.session("bank", mode=None) as s:
         s.execute(root, "auditAll")
-    trace = client.store.trace
+    events = client.store.trace
+    # schema v2: typed events — the read-only traversal records accesses
+    # and method entries, no writes
+    assert {e.kind for e in events} == {"access", "method_entry"}
+    trace = trace_oids(events)
     assert trace[0] == root  # the receiver is accessed first
     assert len(trace) == client.store.metrics.app_loads
     assert set(trace) == client.store.accessed_oids
@@ -88,6 +94,9 @@ def test_trace_records_accesses_in_navigation_order(client):
     chain = client.store.peek(tx_oids[0]).fields
     assert trace.index(chain["type"]) > first_tx
     assert trace.index(chain["emp"]) > first_tx
+    # the method entry for auditAll is recorded right after the root access
+    assert events[1].kind == "method_entry" and events[1].oid == root
+    assert events[1].method_key.endswith("auditAll")
 
 
 def test_trace_reset_and_off_by_default(client):
@@ -153,7 +162,7 @@ def test_recorded_trace_roundtrips_through_replay():
     # deterministic read-only traversal: both runs record identical streams
     assert train.events == eval_.events
     assert train.accesses[0] == root
-    assert [e[1] for e in eval_.events if e[0] == "access"] == eval_.accesses
+    assert [e.oid for e in eval_.events if e.kind in ("access", "write")] == eval_.accesses
     reg = client.logic_module.registered["bank"]
     # static replay of the recorded trace reaches the live session's recall
     res = replay(eval_, predict.make_pos_predictor("capre"), client.store, reg)

@@ -1,14 +1,19 @@
 """The timeliness-aware replay engine: virtual-clock stall arithmetic on
 hand-built traces, disk-slot queueing, bounded-cache thrash accounting, the
 cache-capacity sweep, parallel recording determinism, and the CSV artifact
-shape (ISSUE 2 tentpole)."""
+shape (ISSUE 2 tentpole); plus the write path end-to-end (ISSUE 3): store
+write-allocate/dirty-bit accounting, virtual-clock write-back occupancy,
+the mutating bank workload, listener isolation and counter-reset fixes."""
 
 import csv
 
 import pytest
 
+from repro.apps.bank import build_bank_app, populate_bank_store
+from repro.pos.client import POSClient
 from repro.pos.latency import REPLAY, LatencyModel, VirtualDisk
 from repro.pos.store import ObjectStore
+from repro.pos.trace import TraceEvent, trace_oids
 from repro.predict.base import Predictor
 from repro.predict.evaluate import (
     CSV_COLUMNS,
@@ -174,6 +179,222 @@ def test_cache_capacity_sweep_produces_one_row_per_capacity():
 
 
 # ---------------------------------------------------------------------------
+# the write path: VirtualDisk occupancy, replay arithmetic, store accounting
+# ---------------------------------------------------------------------------
+
+# disk_load=10, write_back=4, think=1, ONE slot: flush delays are exact
+LATW = LatencyModel(disk_load=10.0, remote_hop=0.0, write_back=4.0, think=1.0,
+                    parallel_per_ds=1)
+
+
+def test_virtual_disk_write_back_occupies_the_same_slots():
+    disk = VirtualDisk(LATW)  # 1 slot: loads queue behind flushes
+    assert disk.schedule(0.0) == (0.0, 10.0)
+    assert disk.schedule_write_back(10.0) == (10.0, 14.0)
+    assert disk.schedule(10.0) == (14.0, 24.0)  # queues behind the flush
+    assert disk.loads == 2 and disk.write_backs == 1
+    assert disk.busy_seconds == pytest.approx(24.0)
+
+
+def test_dirty_eviction_flush_delays_queued_loads():
+    """Hand-built mutating trace, capacity 1: the dirty line's flush
+    occupies the only disk arm, so the re-load of the evicted object
+    stalls for load + residual flush time.
+
+      write a : write-allocate 0->10 (stall 10), dirty, think -> 11
+      access b: demand 11->21 (stall 10); inserting b evicts dirty a,
+                flush occupies the slot 21->25
+      access a: needed at 22, load queues behind the flush 25->35
+                (stall 13 = 10 load + 3 residual flush)"""
+    store, (a, b) = _store_with(2)
+    trace = RecordedTrace("t", "m", [("write", a), ("access", b), ("access", a)], [a, b, a])
+    engine = replay_baseline(trace, store, latency=LATW, cache_capacity=1)
+    assert engine.writes == 1 and engine.write_hits == 0
+    assert engine.dirty_evictions == 1 and engine.flushed_writes == 1
+    assert engine.stall_seconds == pytest.approx(33.0)
+    assert engine.thrash_misses == 1
+
+
+def test_write_hit_dirties_without_stalling():
+    store, (a,) = _store_with(1)
+    trace = RecordedTrace("t", "m", [("access", a), ("write", a)], [a, a])
+    engine = replay_baseline(trace, store, latency=LATW)
+    # only the cold read stalls; the write finds the line resident
+    assert engine.stall_seconds == pytest.approx(10.0)
+    assert engine.writes == 1 and engine.write_hits == 1
+    assert engine.flushed_writes == 0  # unbounded cache: never evicted
+
+
+def test_prefetched_write_counts_timely():
+    """A write to an object prefetching made resident is a timely hit —
+    write-allocate was hidden exactly like a read's demand load."""
+    store, (a, b) = _store_with(2)
+    trace = RecordedTrace("t", "m",
+                          [("enter", "Obj.m", a), ("access", a), ("write", b)], [a, b])
+    res = replay(trace, Scripted(on_entry=[b]), store, None, latency=LAT)
+    # a: demand 0->10 (stall 10); b: prefetched load done at 10 <= 11
+    assert res.stall_seconds == pytest.approx(10.0)
+    assert res.timely_coverage == pytest.approx(0.5)
+    assert res.writes == 1 and res.write_hits == 1
+    assert res.recall == pytest.approx(0.5)  # written oids count as demand
+
+
+def test_store_write_allocate_and_dirty_accounting():
+    """ObjectStore.app_write is a demand access: write-allocate miss,
+    dirty bit, accessed_oids, listeners, trace — none of which it used
+    to touch."""
+    store = ObjectStore(n_services=1)
+    ds = store.services[0]
+    a = store.put("X", {"v": 1})
+    missed, seen = [], []
+    store.miss_listener = missed.append
+    store.access_listener = seen.append
+    store.trace = []
+    store.app_write(a)  # uncached: the write performs the disk load
+    m = store.metrics
+    assert m.writes == 1 and m.write_hits == 0 and m.app_cache_misses == 1
+    assert ds.is_cached(a) and a in ds.dirty
+    assert a in store.accessed_oids
+    assert missed == [a] and seen == [a]
+    assert [(e.kind, e.oid) for e in store.trace] == [("write", a)]
+    store.app_write(a)  # resident: write hit, no second miss
+    assert store.metrics.write_hits == 1 and store.metrics.writes == 2
+    assert store.metrics.app_cache_misses == 1
+    assert missed == [a] and seen == [a, a]
+    ds.drop_cache()  # flushes the dirty line (charges write_back)
+    assert ds.flushed_writes == 1 and not ds.dirty
+    assert store.metrics.flushed_writes == 1
+
+
+def test_credit_all_primitive_writes_hit_resident_lines():
+    """The write-dense bank traversal: every transaction is navigated and
+    then updated in place, so each primitive-field write is a write hit on
+    the line the read just loaded — no extra misses, one dirty line per
+    transaction."""
+    client = POSClient(n_services=2)
+    client.register(build_bank_app())
+    root = populate_bank_store(client.store, n_transactions=12)
+    with client.session("bank", mode=None) as s:
+        s.execute(root, "creditAll", 5.0)
+    m = client.store.metrics
+    assert m.writes == 12 and m.write_hits == 12
+    dirty = sum(len(ds.dirty) for ds in client.store.services)
+    assert dirty == 12
+    txs = client.store.peek(root).fields["transactions"]
+    assert all(
+        client.store.peek(t).fields["amount"] == pytest.approx(i + 5.0)
+        for i, t in enumerate(txs)
+    )
+
+
+def test_store_dirty_eviction_flushes_write_back():
+    store = ObjectStore(n_services=1, cache_capacity=1)
+    ds = store.services[0]
+    a = store.put("X", {})
+    b = store.put("X", {})
+    store.app_write(a)
+    ds.load_into_memory(b)  # evicts dirty a -> flush
+    assert ds.evictions == 1
+    assert ds.dirty_evictions == 1 and ds.flushed_writes == 1
+    assert store.metrics.dirty_evictions == 1 and store.metrics.flushed_writes == 1
+    assert a not in ds.dirty
+
+
+def test_reset_runtime_state_clears_eviction_counters():
+    """Regression: DataService.evictions survived reset_runtime_state and
+    accumulated across benchmark repetitions."""
+    store = ObjectStore(n_services=1, cache_capacity=1)
+    ds = store.services[0]
+    oids = [store.put("X", {}) for _ in range(3)]
+    for o in oids:
+        ds.load_into_memory(o)
+    assert ds.evictions == 2
+    store.reset_runtime_state()
+    assert ds.evictions == 0
+    assert ds.dirty_evictions == 0 and ds.flushed_writes == 0
+    for o in oids:
+        ds.load_into_memory(o)
+    assert ds.evictions == 2  # fresh count, not 4
+
+
+def test_second_session_preserves_first_sessions_listeners():
+    """Regression: opening (and closing) a second session used to clobber
+    the first session's predictor monitoring hooks."""
+    client = POSClient(n_services=2)
+    client.register(build_bank_app())
+    populate_bank_store(client.store, n_transactions=5)
+    s1 = client.session("bank", mode="markov-miner")
+    miner_listener = client.store.access_listener
+    assert miner_listener is not None
+    try:
+        with client.session("bank", mode=None):
+            assert client.store.access_listener is miner_listener
+        assert client.store.access_listener is miner_listener
+        # a rop session installs only its miss listener, and removes only it
+        with client.session("bank", mode="rop"):
+            assert client.store.miss_listener is not None
+            assert client.store.access_listener is miner_listener
+        assert client.store.miss_listener is None
+        assert client.store.access_listener is miner_listener
+        # a second miner displaces the hook for its lifetime, then restores
+        with client.session("bank", mode="markov-miner"):
+            assert client.store.access_listener is not miner_listener
+        assert client.store.access_listener is miner_listener
+    finally:
+        s1.close()
+    assert client.store.access_listener is None
+
+
+def test_non_lifo_session_close_never_resurrects_dead_listeners():
+    """Closing sessions out of LIFO order must not reinstall a hook whose
+    predictor already unbound: a zombie miner listener would keep charging
+    monitoring on every access with no session left to remove it."""
+    client = POSClient(n_services=2)
+    client.register(build_bank_app())
+    populate_bank_store(client.store, n_transactions=5)
+    s1 = client.session("bank", mode="markov-miner")
+    s2 = client.session("bank", mode="markov-miner")
+    s1.close()  # s2's hook is installed; s1 removes nothing, restores nothing
+    assert client.store.access_listener is not None
+    s2.close()  # must NOT restore s1's now-dead hook
+    assert client.store.access_listener is None
+    assert client.store.miss_listener is None
+
+
+def test_markov_warm_accepts_event_and_bare_oid_traces():
+    from repro.predict.markov import MarkovMiner
+
+    events = [
+        TraceEvent("access", 1),
+        TraceEvent("method_entry", 1, "X.m"),  # skipped: not a demand event
+        TraceEvent("write", 2),  # writes are part of the mined stream
+        TraceEvent("access", 3),
+    ]
+    assert trace_oids(events) == [1, 2, 3]
+    m_events, m_oids = MarkovMiner(), MarkovMiner()
+    m_events.warm(events)
+    m_oids.warm([1, 2, 3])
+    assert m_events._table == m_oids._table
+
+
+def test_bank_write_workload_scores_writes_for_all_predictors():
+    """The acceptance bar: the mutating bank traversal is recorded with
+    write events and every predictor gets timeliness rows with the write
+    path charged."""
+    wl = _catalog()["bank_write"]
+    results = evaluate_workload(wl, modes=("capre", "markov-miner"), cache_capacities=(64,))
+    assert {r.predictor for r in results} == {"static-capre", "markov-miner"}
+    for r in results:
+        assert r.workload == "setAllTransCustomers"
+        assert r.writes > 0  # the setCustomer updates were replayed
+        assert r.baseline_stall_seconds > 0
+        assert 0.0 <= r.timely_coverage <= 1.0
+    by = {r.predictor: r for r in results}
+    # method-entry lead hides disk loads on the mutating traversal too
+    assert by["static-capre"].stall_seconds < by["static-capre"].baseline_stall_seconds
+
+
+# ---------------------------------------------------------------------------
 # the paper's claim, now measurable
 # ---------------------------------------------------------------------------
 
@@ -227,24 +448,51 @@ def test_write_csv_round_trips_with_nan_safe_cells(tmp_path):
 def test_compare_predict_gate_catches_drops_and_missing_rows(tmp_path):
     from benchmarks.compare_predict import compare
 
-    header = "app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct\n"
+    header = ("app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct,"
+              "writes,write_hits,dirty_evictions,flushed_writes\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header
-                    + "bank,auditAll,static-capre,64,0.99,98.9\n"
-                    + "bank,auditAll,markov-miner,64,0.50,89.8\n")
+                    + "bank,auditAll,static-capre,64,0.99,98.9,0,0,0,0\n"
+                    + "bank,auditAll,markov-miner,64,0.50,89.8,0,0,0,0\n")
     ok = tmp_path / "ok.csv"
     ok.write_text(header
-                  + "bank,auditAll,static-capre,64,0.985,98.0\n"
-                  + "bank,auditAll,markov-miner,64,0.55,90.0\n")
+                  + "bank,auditAll,static-capre,64,0.985,98.0,0,0,0,0\n"
+                  + "bank,auditAll,markov-miner,64,0.55,90.0,0,0,0,0\n")
     assert compare(str(ok), str(base)) == []
     dropped = tmp_path / "dropped.csv"
-    dropped.write_text(header + "bank,auditAll,static-capre,64,0.80,80.0\n")
+    dropped.write_text(header + "bank,auditAll,static-capre,64,0.80,80.0,0,0,0,0\n")
     failures = compare(str(dropped), str(base))
     assert len(failures) == 2  # the regression AND the vanished miner row
     assert any("0.800" in f and "static-capre" in f for f in failures)
     assert any("missing" in f and "markov-miner" in f for f in failures)
     empty = tmp_path / "empty_cell.csv"
     empty.write_text(header
-                     + "bank,auditAll,static-capre,64,,98.0\n"
-                     + "bank,auditAll,markov-miner,64,0.55,90.0\n")
+                     + "bank,auditAll,static-capre,64,,98.0,0,0,0,0\n"
+                     + "bank,auditAll,markov-miner,64,0.55,90.0,0,0,0,0\n")
     assert any("empty" in f for f in compare(str(empty), str(base)))
+
+
+def test_compare_predict_gate_enforces_write_columns(tmp_path):
+    """A replay.csv produced by a write-blind harness (no write columns, or
+    an emptied ``writes`` cell on a mutating row) fails the gate."""
+    from benchmarks.compare_predict import compare
+
+    header = ("app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct,"
+              "writes,write_hits,dirty_evictions,flushed_writes\n")
+    base = tmp_path / "baseline.csv"
+    base.write_text(header + "bank,setAllTransCustomers,static-capre,64,0.95,90.0,21,21,0,0\n")
+    # (a) header without the write columns
+    old_header = "app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct\n"
+    blind = tmp_path / "blind.csv"
+    blind.write_text(old_header + "bank,setAllTransCustomers,static-capre,64,0.95,90.0\n")
+    failures = compare(str(blind), str(base))
+    assert any("write-path columns missing" in f for f in failures)
+    # (b) columns present but the mutating row's writes cell went empty
+    hollow = tmp_path / "hollow.csv"
+    hollow.write_text(header + "bank,setAllTransCustomers,static-capre,64,0.95,90.0,,,,\n")
+    failures = compare(str(hollow), str(base))
+    assert any("writes cell is empty" in f for f in failures)
+    # (c) intact file passes
+    good = tmp_path / "good.csv"
+    good.write_text(header + "bank,setAllTransCustomers,static-capre,64,0.96,91.0,21,21,0,0\n")
+    assert compare(str(good), str(base)) == []
