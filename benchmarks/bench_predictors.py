@@ -39,60 +39,80 @@ PREDICTOR_MODES = (
 
 def run(reps: int = 3, apps=("bank", "bank_write", "wordcount", "kmeans"), modes=PREDICTOR_MODES,
         n_services: int = 4, parallel_workers: int = 16,
-        cache_capacities=(0,)) -> list[BenchResult]:
+        cache_capacities=(0,), policies=("lru",), shared_budget: bool = False) -> list[BenchResult]:
     catalog = _catalog()
     results: list[BenchResult] = []
     for app_name in apps:
         wl = catalog[app_name]
         for capacity in cache_capacities:
-            for mode_name, mode in modes:
-                client = POSClient(
-                    n_services=n_services, latency=BENCH_LATENCY, cache_capacity=capacity
-                )
-                client.register(wl.build_app())
-                root = wl.populate(client.store)
-                # monitoring run: record the event trace the miners train
-                # on (schema v2 — method entries, reads and writes; the
-                # miners normalize to the demand-oid sequence themselves)
-                warm_trace = None
-                if mode in ("markov-miner", "hybrid"):
-                    client.store.trace = []
-                    with client.session(wl.name, mode=None) as s:
-                        wl.run_once(s, root)
-                    warm_trace = list(client.store.trace)
-                    client.store.trace = None
-                times, metrics = [], {}
-                for _ in range(reps):
-                    client.store.reset_runtime_state()
-                    with client.session(
-                        wl.name,
-                        mode=mode,
-                        rop_depth=2,
-                        parallel_workers=parallel_workers,
-                        warm_trace=warm_trace,
-                    ) as s:
-                        t0 = time.perf_counter()
-                        wl.run_once(s, root)
-                        times.append(time.perf_counter() - t0)
-                        s.drain(30.0)
-                        metrics = client.store.metrics.snapshot()
-                        metrics.update(client.store.prefetch_accuracy())
-                        metrics["evictions"] = sum(ds.evictions for ds in client.store.services)
-                        if s.predictor is not None:
-                            metrics.update(s.predictor.overhead.snapshot())
-                cfg = wl.workload if not capacity else f"{wl.workload}_c{capacity}"
-                results.append(
-                    BenchResult(
-                        benchmark=f"predictors_{app_name}",
-                        config=cfg,
-                        mode=mode_name,
-                        mean_s=statistics.mean(times),
-                        stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
-                        reps=reps,
-                        metrics=metrics,
-                    )
-                )
+            for policy in policies:
+                _run_policy(results, wl, app_name, capacity, policy, shared_budget,
+                            modes, reps, n_services, parallel_workers)
     return results
+
+
+def _run_policy(results, wl, app_name, capacity, policy, shared_budget,
+                modes, reps, n_services, parallel_workers) -> None:
+    """One (workload, capacity, policy) cell: bench every mode on a live
+    store running that eviction policy (optionally drawing on a shared
+    global budget rather than per-service capacities)."""
+    for mode_name, mode in modes:
+        client = POSClient(
+            n_services=n_services, latency=BENCH_LATENCY, cache_capacity=capacity,
+            cache_policy=policy, shared_budget=shared_budget,
+        )
+        client.register(wl.build_app())
+        root = wl.populate(client.store)
+        # monitoring run: record the event trace the miners train
+        # on (schema v2 — method entries, reads and writes; the
+        # miners normalize to the demand-oid sequence themselves)
+        warm_trace = None
+        if mode in ("markov-miner", "hybrid"):
+            client.store.trace = []
+            with client.session(wl.name, mode=None) as s:
+                wl.run_once(s, root)
+            warm_trace = list(client.store.trace)
+            client.store.trace = None
+        times, metrics = [], {}
+        for _ in range(reps):
+            client.store.reset_runtime_state()
+            with client.session(
+                wl.name,
+                mode=mode,
+                rop_depth=2,
+                parallel_workers=parallel_workers,
+                warm_trace=warm_trace,
+            ) as s:
+                t0 = time.perf_counter()
+                wl.run_once(s, root)
+                times.append(time.perf_counter() - t0)
+                s.drain(30.0)
+                metrics = client.store.metrics.snapshot()
+                metrics.update(client.store.prefetch_accuracy())
+                metrics["evictions"] = sum(ds.evictions for ds in client.store.services)
+                if s.predictor is not None:
+                    metrics.update(s.predictor.overhead.snapshot())
+                # after the ledger: the live count lives on the store's
+                # policy, not the predictor's (offline-only) ledger slot
+                metrics["protected_evictions"] = client.store.protected_evictions()
+        metrics["policy"] = policy
+        # shared budget only exists at a bounded capacity (ObjectStore
+        # builds no SharedBudget otherwise) — label what actually ran
+        shared = shared_budget and bool(capacity)
+        cfg = wl.workload if not capacity else f"{wl.workload}_c{capacity}"
+        if policy != "lru" or shared:
+            cfg = f"{cfg}_{policy}" + ("_shared" if shared else "")
+        results.append(
+            BenchResult(
+                benchmark=f"predictors_{app_name}",
+                config=cfg,
+                mode=mode_name,
+                mean_s=statistics.mean(times),
+                stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
+                reps=reps,
+                metrics=metrics,
+            )
+        )
 
 
 def write_csv(results: list[BenchResult], path: str = "artifacts/predict/bench.csv") -> str:
@@ -121,12 +141,20 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--cache-capacity", default="0",
                     help="comma-separated per-DS cache capacities to sweep (0 = unbounded)")
+    ap.add_argument("--cache-policy", default="lru",
+                    help="comma-separated eviction policies to sweep "
+                         "(lru, fifo, clock, lfu, prefetch-aware)")
+    ap.add_argument("--shared-budget", action="store_true",
+                    help="treat --cache-capacity as one global line budget "
+                         "shared by all Data Services")
     ap.add_argument("--csv", default="artifacts/predict/bench.csv",
                     help="CSV artifact path ('' disables)")
     args = ap.parse_args()
     apps = ("bank",) if args.fast else ("bank", "bank_write", "wordcount", "kmeans")
     capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
-    results = run(reps=args.reps, apps=apps, cache_capacities=capacities)
+    policies = tuple(p for p in args.cache_policy.split(",") if p)
+    results = run(reps=args.reps, apps=apps, cache_capacities=capacities,
+                  policies=policies, shared_budget=args.shared_budget)
     print("name,us_per_call,derived")
     print_results(results)
     for r in results:

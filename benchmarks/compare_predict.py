@@ -19,10 +19,22 @@ the scoring loop), so equality-modulo-tolerance is a meaningful check:
   * the write-path columns (``writes``, ``write_hits``, ``dirty_evictions``,
     ``flushed_writes``) must be present in the fresh header, and any
     baseline row that charged writes must keep a populated ``writes`` cell
-    — a harness that silently went write-blind fails the gate.
+    — a harness that silently went write-blind fails the gate;
+  * rows are keyed per eviction policy too (``policy`` column; a pre-policy
+    file without the column reads as all-``lru``), and the fresh header
+    must carry the policy columns (``policy``, ``protected_evictions``) —
+    a harness that silently dropped the policy sweep fails the gate.
+
+``--update-baseline`` regenerates the committed baseline in place from the
+fresh file — required in the same PR as any intentional column or metric
+change (see DESIGN.md section 3.5: the baseline must be regenerated
+whenever ``ReplayResult`` columns change).  It refuses to *shrink* the
+gate: a fresh file missing rows the old baseline guarded (a partial sweep
+promoted by accident) fails unless ``--force`` says the drop is meant.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare_predict \
-    artifacts/predict/replay.csv artifacts/predict/baseline.csv [--tolerance 0.02]
+    artifacts/predict/replay.csv artifacts/predict/baseline.csv \
+    [--tolerance 0.02] [--update-baseline]
 """
 
 from __future__ import annotations
@@ -30,11 +42,15 @@ from __future__ import annotations
 import csv
 import sys
 
-Key = tuple[str, str, str, str]  # (app, workload, predictor, cache_capacity)
+Key = tuple[str, str, str, str, str]  # (app, workload, predictor, cache_capacity, policy)
 
 #: the write-path columns the v2 trace schema added — a replay.csv missing
 #: them was produced by a pre-write-path harness and must fail the gate
 WRITE_COLUMNS = ("writes", "write_hits", "dirty_evictions", "flushed_writes")
+
+#: the eviction-policy columns — a replay.csv missing them was produced by
+#: a pre-policy harness (hard-coded LRU) and must fail the gate
+POLICY_COLUMNS = ("policy", "protected_evictions")
 
 
 def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
@@ -43,7 +59,11 @@ def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
         rows = list(reader)
         fields = list(reader.fieldnames or [])
     return (
-        {(r["app"], r["workload"], r["predictor"], r["cache_capacity"]): r for r in rows},
+        {
+            (r["app"], r["workload"], r["predictor"], r["cache_capacity"],
+             r.get("policy") or "lru"): r
+            for r in rows
+        },
         fields,
     )
 
@@ -58,9 +78,15 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> l
             f"{current_path}: write-path columns missing from header: "
             f"{', '.join(missing_cols)}"
         )
+    missing_cols = [c for c in POLICY_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: eviction-policy columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
     for key in sorted(baseline):
-        app, workload, predictor, cap = key
-        label = f"{app}/{workload}/{predictor}@cache={cap}"
+        app, workload, predictor, cap, policy = key
+        label = f"{app}/{workload}/{predictor}@cache={cap}/{policy}"
         base_tc = baseline[key].get("timely_coverage")
         if not base_tc:
             continue  # baseline never scored this row; nothing to hold it to
@@ -93,7 +119,32 @@ def main(argv=None) -> int:
     ap.add_argument("current", help="freshly generated replay.csv")
     ap.add_argument("baseline", help="committed baseline.csv")
     ap.add_argument("--tolerance", type=float, default=0.02)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="regenerate the committed baseline in place from the "
+                         "fresh file instead of comparing (use in the PR that "
+                         "intentionally changes columns or metrics)")
+    ap.add_argument("--force", action="store_true",
+                    help="with --update-baseline: allow the new baseline to "
+                         "drop rows the old one guarded")
     args = ap.parse_args(argv)
+    if args.update_baseline:
+        import os
+        import shutil
+
+        cur, _ = _load(args.current)
+        if os.path.exists(args.baseline) and not args.force:
+            old, _ = _load(args.baseline)
+            dropped = sorted(set(old) - set(cur))
+            if dropped:
+                print("refusing to shrink the baseline — these rows would lose "
+                      "gate coverage (run the full CI sweep, or pass --force "
+                      "to drop them deliberately):")
+                for key in dropped:
+                    print(f"  {'/'.join(key)}")
+                return 1
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline regenerated: {args.baseline} <- {args.current} ({len(cur)} rows)")
+        return 0
     failures = compare(args.current, args.baseline, tolerance=args.tolerance)
     if failures:
         print("PREDICTION TIMELINESS REGRESSION:")
@@ -101,9 +152,9 @@ def main(argv=None) -> int:
             print(f"  {msg}")
         return 1
     cur, _ = _load(args.current)
-    for (app, workload, pred, cap), r in sorted(cur.items()):
+    for (app, workload, pred, cap, policy), r in sorted(cur.items()):
         if pred == "static-capre":
-            print(f"ok {app}/{workload}/static-capre@cache={cap}: "
+            print(f"ok {app}/{workload}/static-capre@cache={cap}/{policy}: "
                   f"timely_coverage={r['timely_coverage']} stall_saved={r['stall_saved_pct']}%")
     print(f"prediction timeliness: {len(cur)} rows within tolerance of baseline")
     return 0

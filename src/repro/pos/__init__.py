@@ -6,6 +6,7 @@ receiver); prefetching warms each Data Service's local memory from its own
 disk, in parallel across services.
 """
 
+from .eviction import POLICIES, EvictionPolicy, SharedBudget, make_policy  # noqa: F401
 from .latency import LatencyModel  # noqa: F401
 from .trace import TRACE_SCHEMA_VERSION, TraceEvent, as_events, trace_oids  # noqa: F401
 from .store import ObjectStore, PersistentObject  # noqa: F401

@@ -144,11 +144,13 @@ class Session:
 class POSClient:
     """Convenience facade: one store + one Logic Module."""
 
-    def __init__(self, n_services: int = 4, latency=None, cache_capacity: int = 0):
+    def __init__(self, n_services: int = 4, latency=None, cache_capacity: int = 0,
+                 cache_policy: str = "lru", shared_budget: bool = False):
         from .latency import ZERO
 
         self.store = ObjectStore(
-            n_services=n_services, latency=latency or ZERO, cache_capacity=cache_capacity
+            n_services=n_services, latency=latency or ZERO, cache_capacity=cache_capacity,
+            cache_policy=cache_policy, shared_budget=shared_budget,
         )
         self.logic_module = LogicModule()
 

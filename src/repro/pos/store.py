@@ -22,6 +22,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Optional
 
+from .eviction import DEFAULT_POLICY, SharedBudget, make_policy
 from .latency import LatencyModel, ZERO
 from .trace import TraceEvent, access_event, write_event, method_entry_event
 
@@ -34,16 +35,26 @@ class PersistentObject:
 
 
 class DataService:
-    def __init__(self, ds_id: int, latency: LatencyModel, cache_capacity: int = 0):
+    def __init__(self, ds_id: int, latency: LatencyModel, cache_capacity: int = 0,
+                 policy: str = DEFAULT_POLICY, budget: Optional[SharedBudget] = None):
         self.ds_id = ds_id
         self.latency = latency
         self.disk: dict[int, PersistentObject] = {}
-        # LRU memory cache (capacity 0 = unbounded, the paper's regime);
+        # bounded memory cache (capacity 0 = unbounded, the paper's regime);
+        # eviction order is delegated to a pluggable policy (pos.eviction) —
         # a bounded cache exposes prefetch thrashing: useless ROP prefetches
-        # evict objects the application still needs
+        # evict objects the application still needs.  Under a SharedBudget
+        # every service draws lines from one global capacity instead, the
+        # budget's policy spans all services (victims may be stolen from
+        # another service's cache), and all services share one cache lock so
+        # cross-service victim selection is race-free.
         self.cache_capacity = cache_capacity
         self.cache: dict[int, None] = {}
-        self._cache_lock = threading.Lock()
+        self.budget = budget
+        self.policy = budget.policy if budget is not None else make_policy(
+            policy, capacity=cache_capacity
+        )
+        self._cache_lock = budget.lock if budget is not None else threading.Lock()
         self._slots = threading.Semaphore(max(1, latency.parallel_per_ds))
         # request coalescing: concurrent loads of the same object share one
         # disk read — the second requester waits out the remaining latency
@@ -59,23 +70,41 @@ class DataService:
         # the shared StoreMetrics too (None for a standalone DataService)
         self._owner: Optional["ObjectStore"] = None
 
-    def _touch(self, oid: int) -> Optional[int]:
-        """LRU bump + bounded-capacity eviction (callers hold the lock).
-        Returns a dirty victim oid that now needs flushing (the caller
-        flushes *after* releasing the lock), or None."""
-        self.cache.pop(oid, None)
-        self.cache[oid] = None
-        if self.cache_capacity and len(self.cache) > self.cache_capacity:
-            victim = next(iter(self.cache))
-            del self.cache[victim]
-            self.evictions += 1
-            if victim in self.dirty:
-                self.dirty.discard(victim)
-                self.dirty_evictions += 1
-                if self._owner is not None:
-                    self._owner._note_dirty_eviction()
-                return victim
-        return None
+    def _touch(self, oid: int, prefetch: bool = False) -> list[tuple["DataService", int]]:
+        """Policy bump/insert + bounded-capacity eviction (callers hold the
+        cache lock).  Returns the dirty ``(service, victim)`` pairs that now
+        need flushing — the caller flushes *after* releasing the lock, on
+        the victim's own service (which, under a shared budget, may not be
+        this one)."""
+        if oid in self.cache:
+            self.policy.note_access(oid, prefetch=prefetch)
+        else:
+            self.cache[oid] = None
+            if self.budget is not None:
+                self.budget.note_insert(oid, self, prefetch=prefetch)
+            else:
+                self.policy.note_insert(oid, prefetch=prefetch)
+        flushes: list[tuple[DataService, int]] = []
+        if self.budget is not None:
+            while self.budget.overflowed():
+                vds, victim = self.budget.pick_victim()
+                vds._evict_line(victim, flushes)
+        elif self.cache_capacity:
+            while len(self.cache) > self.cache_capacity:
+                self._evict_line(self.policy.pick_victim(), flushes)
+        return flushes
+
+    def _evict_line(self, victim: int, flushes: list[tuple["DataService", int]]) -> None:
+        """Drop one resident line (policy already forgot it); queue its
+        flush if dirty.  Callers hold the cache lock."""
+        self.cache.pop(victim, None)
+        self.evictions += 1
+        if victim in self.dirty:
+            self.dirty.discard(victim)
+            self.dirty_evictions += 1
+            if self._owner is not None:
+                self._owner._note_dirty_eviction()
+            flushes.append((self, victim))
 
     def _flush(self, oid: int) -> None:
         """Write a dirty object back to disk (occupies a disk slot for
@@ -94,19 +123,23 @@ class DataService:
         self.evictions = 0
         self.dirty_evictions = 0
         self.flushed_writes = 0
+        self.policy.protected_evictions = 0
 
     def is_cached(self, oid: int) -> bool:
         with self._cache_lock:
             return oid in self.cache
 
-    def load_into_memory(self, oid: int) -> bool:
+    def load_into_memory(self, oid: int, prefetch: bool = False) -> bool:
         """Disk -> memory. Returns True if this call performed the disk load
-        (False: cached, or coalesced onto an in-flight load)."""
+        (False: cached, or coalesced onto an in-flight load).  ``prefetch``
+        marks the touch as prefetch-path for the eviction policy (a
+        prefetch-aware policy must not count it as the application *using*
+        the line)."""
         while True:
-            victim = None
+            flushes: list[tuple[DataService, int]] = []
             with self._cache_lock:
                 if oid in self.cache:
-                    victim = self._touch(oid)
+                    flushes = self._touch(oid, prefetch=prefetch)
                     hit = True
                 else:
                     hit = False
@@ -118,9 +151,9 @@ class DataService:
                     else:
                         owner = False
             if hit:
-                if victim is not None:
+                for vds, victim in flushes:
                     # flushing sleeps on a disk slot: never under the lock
-                    self._flush(victim)
+                    vds._flush(victim)
                 return False
             if owner:
                 break
@@ -136,18 +169,18 @@ class DataService:
                     # the owner signalled but never landed the load: clear
                     # the stale entry so the next pass can take ownership
                     self._inflight.pop(oid, None)
-        victim = None
+        flushes = []
         try:
             with self._slots:
                 self.latency.sleep(self.latency.disk_load)
             with self._cache_lock:
-                victim = self._touch(oid)
+                flushes = self._touch(oid, prefetch=prefetch)
         finally:
             with self._cache_lock:
                 self._inflight.pop(oid, None)
             ev.set()
-        if victim is not None:
-            self._flush(victim)
+        for vds, victim in flushes:
+            vds._flush(victim)
         return True
 
     def write(self, oid: int) -> bool:
@@ -164,6 +197,11 @@ class DataService:
 
     def drop_cache(self) -> None:
         with self._cache_lock:
+            for oid in self.cache:
+                if self.budget is not None:
+                    self.budget.note_remove(oid)
+                else:
+                    self.policy.note_remove(oid)
             self.cache.clear()
             for ev in self._inflight.values():
                 ev.set()
@@ -226,10 +264,23 @@ class ObjectStore:
     """The POS: N Data Services + placement + cost accounting."""
 
     def __init__(self, n_services: int = 4, latency: LatencyModel = ZERO,
-                 cache_capacity: int = 0):
+                 cache_capacity: int = 0, cache_policy: str = DEFAULT_POLICY,
+                 shared_budget: bool = False):
         self.latency = latency
+        self.cache_policy = cache_policy
+        # shared-memory-budget mode: ``cache_capacity`` is one global line
+        # budget all services draw from (policy-mediated stealing), instead
+        # of a fixed per-service capacity
+        self.budget = (
+            SharedBudget(cache_capacity, policy=cache_policy)
+            if shared_budget and cache_capacity
+            else None
+        )
         self.services = [
-            DataService(i, latency, cache_capacity) for i in range(n_services)
+            DataService(i, latency,
+                        0 if self.budget is not None else cache_capacity,
+                        policy=cache_policy, budget=self.budget)
+            for i in range(n_services)
         ]
         for ds in self.services:
             ds._owner = self
@@ -361,7 +412,7 @@ class ObjectStore:
         """Load ``oid`` into its own Data Service's memory (no execution
         redirection: 'dataClay ... loads the object where it is stored')."""
         ds = self.service_of(oid)
-        did_load = ds.load_into_memory(oid)
+        did_load = ds.load_into_memory(oid, prefetch=True)
         with self._metrics_lock:
             self.metrics.prefetch_requests += 1
             if did_load:
@@ -375,6 +426,13 @@ class ObjectStore:
 
     # -- bookkeeping ---------------------------------------------------------
 
+    def protected_evictions(self) -> int:
+        """Evictions where the policy passed over protected prefetched
+        lines (store-wide; the shared budget's policy already spans all
+        services, so count each policy instance once)."""
+        policies = {id(ds.policy): ds.policy for ds in self.services}
+        return sum(p.protected_evictions for p in policies.values())
+
     def reset_runtime_state(self) -> None:
         """Drop all caches and counters (between benchmark repetitions).
         ``drop_cache`` flushes dirty write-back state first; the per-service
@@ -383,6 +441,8 @@ class ObjectStore:
         for ds in self.services:
             ds.drop_cache()
             ds.reset_counters()
+        if self.budget is not None:
+            self.budget.reset()
         with self._metrics_lock:
             self.metrics = StoreMetrics()
             self.accessed_oids = set()

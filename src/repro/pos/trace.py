@@ -33,8 +33,15 @@ METHOD_ENTRY = "method_entry"
 #: (and a predictor could have prefetched it)
 DEMAND_KINDS = (ACCESS, WRITE)
 
-# legacy tuple spelling used by the pre-v2 offline recorder
-_LEGACY_KINDS = {"enter": METHOD_ENTRY, ACCESS: ACCESS, WRITE: WRITE}
+# legacy tuple spelling used by the pre-v2 offline recorder, plus the
+# canonical kind names so serialized events (``TraceEvent.to_tuple``)
+# round-trip through ``as_events``
+_LEGACY_KINDS = {
+    "enter": METHOD_ENTRY,
+    METHOD_ENTRY: METHOD_ENTRY,
+    ACCESS: ACCESS,
+    WRITE: WRITE,
+}
 
 
 @dataclass(frozen=True)
@@ -46,6 +53,15 @@ class TraceEvent:
     @property
     def is_demand(self) -> bool:
         return self.kind in DEMAND_KINDS
+
+    def to_tuple(self) -> tuple:
+        """Serialize to the plain-tuple wire form (JSON-friendly: strings
+        and ints only).  ``as_events`` accepts the result, so a trace can be
+        dumped to disk and replayed: ``as_events(ev.to_tuple() for ev in
+        trace)`` round-trips exactly."""
+        if self.kind == METHOD_ENTRY:
+            return (self.kind, self.method_key, self.oid)
+        return (self.kind, self.oid)
 
 
 def access_event(oid: int) -> TraceEvent:

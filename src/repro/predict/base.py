@@ -53,6 +53,7 @@ class Overhead:
     late_predictions: int = 0  # predicted, but load still in flight (or queued) at need
     evicted_before_use: int = 0  # prefetched loads evicted before any access
     hidden_seconds: float = 0.0  # disk seconds removed from the app critical path
+    protected_evictions: int = 0  # evictions where the policy spared a pending prefetch
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)

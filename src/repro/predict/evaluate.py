@@ -43,7 +43,8 @@ are regression-checkable across PRs (``benchmarks/compare_predict.py``).
 ``benchmarks/bench_predictors.py`` is the wall-clock companion.
 
 Run: ``PYTHONPATH=src python -m repro.predict.evaluate
-[--fast] [--apps a,b] [--cache-capacity 0,64,256] [--out artifacts/predict]``
+[--fast] [--apps a,b] [--cache-capacity 0,64,256]
+[--cache-policy lru,prefetch-aware] [--shared-budget] [--out artifacts/predict]``
 """
 
 from __future__ import annotations
@@ -54,6 +55,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 from repro.pos.client import POSClient, Session, SessionConfig
+from repro.pos.eviction import DEFAULT_POLICY, SharedBudget, make_policy
 from repro.pos.latency import REPLAY, LatencyModel, VirtualDisk
 from repro.pos.store import prefetch_accuracy
 from repro.pos.trace import (
@@ -248,13 +250,31 @@ class VirtualReplay:
     the in-flight load.  Writes write-allocate (an uncached write is a
     demand load), dirty their cache line, and evicting a dirty line
     schedules ``write_back`` occupancy on the same disk slots — off the
-    app's critical path, but delaying loads queued behind it."""
+    app's critical path, but delaying loads queued behind it.
 
-    def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0):
+    Eviction order is delegated to the same ``pos.eviction`` policies the
+    live ``DataService`` runs, so simulated and measured thrash come from
+    one code path.  ``shared_budget=True`` makes ``cache_capacity`` one
+    global line budget drawn on by every service (one policy instance spans
+    them all and victims are stolen wherever they live), mirroring the
+    store's ``SharedBudget`` mode."""
+
+    def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
+                 policy: str = DEFAULT_POLICY, shared_budget: bool = False):
         n = len(store.services)
         self.store = store
         self.latency = latency
         self.cache_capacity = cache_capacity
+        self.policy_name = policy
+        self.shared_budget = shared_budget and bool(cache_capacity)
+        if self.shared_budget:
+            # the store's own SharedBudget (owners are Data-Service indices
+            # here; its lock is unused — replay is single-threaded)
+            self.budget: Optional[SharedBudget] = SharedBudget(cache_capacity, policy=policy)
+            self.policies = [self.budget.policy] * n
+        else:
+            self.budget = None
+            self.policies = [make_policy(policy, capacity=cache_capacity) for _ in range(n)]
         self.disks = [VirtualDisk(latency) for _ in range(n)]
         self.caches: list[dict[int, _CacheEntry]] = [{} for _ in range(n)]
         self.inflight: list[dict[int, tuple[float, float]]] = [{} for _ in range(n)]
@@ -291,23 +311,46 @@ class VirtualReplay:
             del self.inflight[ds_i][oid]
             self._insert(ds_i, oid, "pf")
 
+    @property
+    def protected_evictions(self) -> int:
+        policies = {id(p): p for p in self.policies}
+        return sum(p.protected_evictions for p in policies.values())
+
     def _insert(self, ds_i: int, oid: int, source: str, used: bool = False) -> None:
         cache = self.caches[ds_i]
-        prev = cache.pop(oid, None)
-        cache[oid] = prev if prev is not None else _CacheEntry(source, used)
-        if self.cache_capacity and len(cache) > self.cache_capacity:
-            victim_oid = next(iter(cache))
-            victim = cache.pop(victim_oid)
-            self.evictions += 1
-            self._evicted_ever.add(victim_oid)
-            if victim.source == "pf" and not victim.used:
-                self.evicted_before_use += 1
-            if victim.dirty:
-                # the deferred cost of the write path: the flush occupies a
-                # disk slot now, delaying whatever loads queue behind it
-                self.dirty_evictions += 1
-                self.flushed_writes += 1
-                self.disks[ds_i].schedule_write_back(self.t)
+        if oid in cache:
+            self.policies[ds_i].note_access(oid, prefetch=(source == "pf"))
+        elif self.budget is not None:
+            cache[oid] = _CacheEntry(source, used)
+            self.budget.note_insert(oid, ds_i, prefetch=(source == "pf"), used=used)
+        else:
+            cache[oid] = _CacheEntry(source, used)
+            self.policies[ds_i].note_insert(oid, prefetch=(source == "pf"), used=used)
+        self._evict_overflow(ds_i)
+
+    def _evict_overflow(self, ds_i: int) -> None:
+        if not self.cache_capacity:
+            return
+        if self.budget is not None:
+            while self.budget.overflowed():
+                vds_i, victim_oid = self.budget.pick_victim()
+                self._evict(vds_i, victim_oid)
+        else:
+            while len(self.caches[ds_i]) > self.cache_capacity:
+                self._evict(ds_i, self.policies[ds_i].pick_victim())
+
+    def _evict(self, ds_i: int, victim_oid: int) -> None:
+        victim = self.caches[ds_i].pop(victim_oid)
+        self.evictions += 1
+        self._evicted_ever.add(victim_oid)
+        if victim.source == "pf" and not victim.used:
+            self.evicted_before_use += 1
+        if victim.dirty:
+            # the deferred cost of the write path: the flush occupies a
+            # disk slot now, delaying whatever loads queue behind it
+            self.dirty_evictions += 1
+            self.flushed_writes += 1
+            self.disks[ds_i].schedule_write_back(self.t)
 
     # -- the two event kinds -------------------------------------------------
 
@@ -321,8 +364,9 @@ class VirtualReplay:
             self.prefetch_requests += 1
             cache = self.caches[ds_i]
             if oid in cache:
-                entry = cache.pop(oid)
-                cache[oid] = entry  # LRU bump, keep source/used
+                # policy bump only (a prefetch touch must not count as the
+                # application using the line), keep source/used
+                self.policies[ds_i].note_access(oid, prefetch=True)
                 continue
             if oid in self.inflight[ds_i]:
                 continue
@@ -350,8 +394,7 @@ class VirtualReplay:
         if entry is not None:
             # resident: ready-at <= needed-at. Timely iff prefetching (not a
             # prior demand load) put it there.
-            cache.pop(oid)
-            cache[oid] = entry
+            self.policies[ds_i].note_access(oid)
             if entry.source == "pf":
                 if not entry.used:
                     self.hidden_seconds += self.latency.disk_load
@@ -394,6 +437,8 @@ class ReplayResult:
     workload: str
     predictor: str
     cache_capacity: int
+    policy: str
+    shared_budget: bool
     precision: Optional[float]
     recall: Optional[float]
     evaluated: bool
@@ -422,12 +467,15 @@ class ReplayResult:
 
 
 def replay_baseline(
-    trace: RecordedTrace, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0
+    trace: RecordedTrace, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
+    policy: str = DEFAULT_POLICY, shared_budget: bool = False
 ) -> VirtualReplay:
     """The no-prefetch reference: every cold (or thrashed-out) demand event
     pays the full disk load (writes included — write-allocate + dirty
-    evictions).  Same trace, same clock, no predictions."""
-    engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity)
+    evictions).  Same trace, same clock, same eviction policy, no
+    predictions."""
+    engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
+                           policy=policy, shared_budget=shared_budget)
     for ev in as_events(trace.events):
         if ev.kind == ACCESS:
             engine.access(ev.oid)
@@ -443,12 +491,15 @@ def replay(
     reg,
     latency: LatencyModel = REPLAY,
     cache_capacity: int = 0,
+    policy: str = DEFAULT_POLICY,
+    shared_budget: bool = False,
     baseline_stall_seconds: Optional[float] = None,
 ) -> ReplayResult:
     """Drive ``predictor`` through the recorded event stream on the virtual
     clock and score what its prefetches would have hidden."""
     predictor.attach(store, reg)
-    engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity)
+    engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
+                           policy=policy, shared_budget=shared_budget)
     predicted: set[int] = set()
     accessed: set[int] = set()
     n_access, covered = 0, 0
@@ -473,7 +524,8 @@ def replay(
             engine.predict(out)
     if baseline_stall_seconds is None:
         baseline_stall_seconds = replay_baseline(
-            trace, store, latency=latency, cache_capacity=cache_capacity
+            trace, store, latency=latency, cache_capacity=cache_capacity,
+            policy=policy, shared_budget=shared_budget,
         ).stall_seconds
     saved = (
         100.0 * (1.0 - engine.stall_seconds / baseline_stall_seconds)
@@ -487,11 +539,16 @@ def replay(
     overhead["late_predictions"] = engine.partial
     overhead["evicted_before_use"] = engine.evicted_before_use
     overhead["hidden_seconds"] = engine.hidden_seconds
+    overhead["protected_evictions"] = engine.protected_evictions
     return ReplayResult(
         app=trace.app_name,
         workload=trace.workload,
         predictor=predictor.name,
         cache_capacity=cache_capacity,
+        policy=policy,
+        # the engine's effective mode, not the requested flag: at capacity 0
+        # there is no budget to share and the row must say so
+        shared_budget=engine.shared_budget,
         precision=acc["precision"],
         recall=acc["recall"],
         evaluated=acc["evaluated"],
@@ -521,37 +578,43 @@ def evaluate_workload(
     rop_depth: int = 2,
     config: Optional[SessionConfig] = None,
     cache_capacities: Sequence[int] = (0,),
+    policies: Sequence[str] = (DEFAULT_POLICY,),
+    shared_budget: bool = False,
     latency: LatencyModel = REPLAY,
     recorded: Optional[tuple[POSClient, int, list[RecordedTrace]]] = None,
 ) -> list[ReplayResult]:
     """Record (train + eval runs), then replay every requested predictor
-    under every cache capacity — miners warmed on the train run, everyone
-    scored on the eval run.  ``rop_depth`` is only consulted when no
-    ``config`` is supplied; pass ``recorded`` to reuse traces from
-    ``record_catalog``."""
+    under every (cache capacity, eviction policy) — miners warmed on the
+    train run, everyone scored on the eval run.  ``rop_depth`` is only
+    consulted when no ``config`` is supplied; pass ``recorded`` to reuse
+    traces from ``record_catalog``."""
     client, _root, traces = recorded if recorded is not None else record_workload(wl, runs=2)
     train, eval_ = traces[0], traces[-1]
     reg = client.logic_module.registered[wl.name]
     cfg = config if config is not None else SessionConfig(rop_depth=rop_depth)
     results = []
     for capacity in cache_capacities:
-        baseline = replay_baseline(
-            eval_, client.store, latency=latency, cache_capacity=capacity
-        ).stall_seconds
-        for mode in modes if modes is not None else available(kind="pos"):
-            predictor = make_pos_predictor(mode, config=cfg)
-            predictor.warm(train.accesses)
-            results.append(
-                replay(
-                    eval_,
-                    predictor,
-                    client.store,
-                    reg,
-                    latency=latency,
-                    cache_capacity=capacity,
-                    baseline_stall_seconds=baseline,
+        for policy in policies:
+            baseline = replay_baseline(
+                eval_, client.store, latency=latency, cache_capacity=capacity,
+                policy=policy, shared_budget=shared_budget,
+            ).stall_seconds
+            for mode in modes if modes is not None else available(kind="pos"):
+                predictor = make_pos_predictor(mode, config=cfg)
+                predictor.warm(train.accesses)
+                results.append(
+                    replay(
+                        eval_,
+                        predictor,
+                        client.store,
+                        reg,
+                        latency=latency,
+                        cache_capacity=capacity,
+                        policy=policy,
+                        shared_budget=shared_budget,
+                        baseline_stall_seconds=baseline,
+                    )
                 )
-            )
     return results
 
 
@@ -560,6 +623,8 @@ def evaluate_apps(
     modes: Optional[Sequence[str]] = None,
     rop_depth: int = 2,
     cache_capacities: Sequence[int] = (0,),
+    policies: Sequence[str] = (DEFAULT_POLICY,),
+    shared_budget: bool = False,
     latency: LatencyModel = REPLAY,
 ) -> list[ReplayResult]:
     catalog = _catalog()
@@ -575,6 +640,8 @@ def evaluate_apps(
                 modes=modes,
                 rop_depth=rop_depth,
                 cache_capacities=cache_capacities,
+                policies=policies,
+                shared_budget=shared_budget,
                 latency=latency,
                 recorded=recorded[name],
             )
@@ -592,6 +659,7 @@ _COLUMNS = (
     ("workload", "{}"),
     ("predictor", "{}"),
     ("cache_capacity", "{}"),
+    ("policy", "{}"),
     ("precision", "{:.3f}"),
     ("recall", "{:.3f}"),
     ("coverage", "{:.3f}"),
@@ -622,6 +690,8 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     "evicted_before_use",
     "hidden_seconds",
     "dirty_evictions",
+    "protected_evictions",
+    "shared_budget",
 )
 
 
@@ -666,6 +736,13 @@ def main(argv: Optional[list[str]] = None) -> None:
     ap.add_argument("--rop-depth", type=int, default=2)
     ap.add_argument("--cache-capacity", default="0",
                     help="comma-separated per-DS cache capacities to sweep (0 = unbounded)")
+    ap.add_argument("--cache-policy", default=DEFAULT_POLICY,
+                    help="comma-separated eviction policies to sweep "
+                         "(lru, fifo, clock, lfu, prefetch-aware)")
+    ap.add_argument("--shared-budget", action="store_true",
+                    help="treat --cache-capacity as one global line budget drawn "
+                         "on by all Data Services (policy-mediated stealing) "
+                         "instead of a per-service capacity")
     ap.add_argument("--out", default="artifacts/predict",
                     help="directory for the CSV artifact (replay.csv)")
     ap.add_argument("--no-csv", action="store_true", help="print tables only")
@@ -677,8 +754,10 @@ def main(argv: Optional[list[str]] = None) -> None:
     )
     modes = tuple(m for m in args.modes.split(",") if m) if args.modes else None
     capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
+    policies = tuple(p for p in args.cache_policy.split(",") if p)
     results = evaluate_apps(
-        apps=apps, modes=modes, rop_depth=args.rop_depth, cache_capacities=capacities
+        apps=apps, modes=modes, rop_depth=args.rop_depth, cache_capacities=capacities,
+        policies=policies, shared_budget=args.shared_budget,
     )
     print(format_table(results))
     if not args.no_csv:

@@ -1,0 +1,46 @@
+"""Hypothesis property tests over the eviction subsystem: random
+access/write/prefetch/drop sequences against every policy, per-service and
+shared-budget, checking the cache-accounting invariants of
+``test_eviction_policies._run_invariant_sequence``:
+
+  * cache size never exceeds capacity (per service, or globally under a
+    shared budget);
+  * ``flushed_writes == dirty_evictions + explicit drop_cache flushes``;
+  * no oid is simultaneously resident and evicted (the policy's tracked
+    set always equals the host's cache membership; dirty lines are always
+    resident);
+  * metrics are identical after ``reset_runtime_state`` + replay of the
+    same sequence (no state leaks across benchmark repetitions).
+
+Kept separate from the deterministic suite because the importorskip guard
+skips a whole module — the seeded fallback sweep must still run where
+hypothesis is not installed.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from test_eviction_policies import (
+    N_OBJECTS,
+    OP_KINDS,
+    TEST_POLICIES,
+    _run_invariant_sequence,
+)
+
+_ops_strategy = st.lists(
+    st.tuples(st.sampled_from(OP_KINDS), st.integers(0, N_OBJECTS - 1)),
+    max_size=120,
+)
+
+
+@pytest.mark.parametrize("policy", TEST_POLICIES)
+@settings(max_examples=25, deadline=None)
+@given(
+    capacity=st.sampled_from((0, 1, 2, 3, 5, 8)),
+    shared=st.booleans(),
+    ops=_ops_strategy,
+)
+def test_cache_accounting_invariants_hold_for_every_policy(policy, capacity, shared, ops):
+    _run_invariant_sequence(policy, capacity, shared, ops)

@@ -448,27 +448,28 @@ def test_write_csv_round_trips_with_nan_safe_cells(tmp_path):
 def test_compare_predict_gate_catches_drops_and_missing_rows(tmp_path):
     from benchmarks.compare_predict import compare
 
-    header = ("app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct,"
-              "writes,write_hits,dirty_evictions,flushed_writes\n")
+    header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
+              "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
+              "protected_evictions\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header
-                    + "bank,auditAll,static-capre,64,0.99,98.9,0,0,0,0\n"
-                    + "bank,auditAll,markov-miner,64,0.50,89.8,0,0,0,0\n")
+                    + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,0\n"
+                    + "bank,auditAll,markov-miner,64,lru,0.50,89.8,0,0,0,0,0\n")
     ok = tmp_path / "ok.csv"
     ok.write_text(header
-                  + "bank,auditAll,static-capre,64,0.985,98.0,0,0,0,0\n"
-                  + "bank,auditAll,markov-miner,64,0.55,90.0,0,0,0,0\n")
+                  + "bank,auditAll,static-capre,64,lru,0.985,98.0,0,0,0,0,0\n"
+                  + "bank,auditAll,markov-miner,64,lru,0.55,90.0,0,0,0,0,0\n")
     assert compare(str(ok), str(base)) == []
     dropped = tmp_path / "dropped.csv"
-    dropped.write_text(header + "bank,auditAll,static-capre,64,0.80,80.0,0,0,0,0\n")
+    dropped.write_text(header + "bank,auditAll,static-capre,64,lru,0.80,80.0,0,0,0,0,0\n")
     failures = compare(str(dropped), str(base))
     assert len(failures) == 2  # the regression AND the vanished miner row
     assert any("0.800" in f and "static-capre" in f for f in failures)
     assert any("missing" in f and "markov-miner" in f for f in failures)
     empty = tmp_path / "empty_cell.csv"
     empty.write_text(header
-                     + "bank,auditAll,static-capre,64,,98.0,0,0,0,0\n"
-                     + "bank,auditAll,markov-miner,64,0.55,90.0,0,0,0,0\n")
+                     + "bank,auditAll,static-capre,64,lru,,98.0,0,0,0,0,0\n"
+                     + "bank,auditAll,markov-miner,64,lru,0.55,90.0,0,0,0,0,0\n")
     assert any("empty" in f for f in compare(str(empty), str(base)))
 
 
@@ -477,22 +478,51 @@ def test_compare_predict_gate_enforces_write_columns(tmp_path):
     an emptied ``writes`` cell on a mutating row) fails the gate."""
     from benchmarks.compare_predict import compare
 
-    header = ("app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct,"
-              "writes,write_hits,dirty_evictions,flushed_writes\n")
+    header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
+              "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
+              "protected_evictions\n")
     base = tmp_path / "baseline.csv"
-    base.write_text(header + "bank,setAllTransCustomers,static-capre,64,0.95,90.0,21,21,0,0\n")
+    base.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,21,21,0,0,0\n")
     # (a) header without the write columns
-    old_header = "app,workload,predictor,cache_capacity,timely_coverage,stall_saved_pct\n"
+    old_header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
+                  "stall_saved_pct,protected_evictions\n")
     blind = tmp_path / "blind.csv"
-    blind.write_text(old_header + "bank,setAllTransCustomers,static-capre,64,0.95,90.0\n")
+    blind.write_text(old_header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,0\n")
     failures = compare(str(blind), str(base))
     assert any("write-path columns missing" in f for f in failures)
     # (b) columns present but the mutating row's writes cell went empty
     hollow = tmp_path / "hollow.csv"
-    hollow.write_text(header + "bank,setAllTransCustomers,static-capre,64,0.95,90.0,,,,\n")
+    hollow.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,,,,,0\n")
     failures = compare(str(hollow), str(base))
     assert any("writes cell is empty" in f for f in failures)
     # (c) intact file passes
     good = tmp_path / "good.csv"
-    good.write_text(header + "bank,setAllTransCustomers,static-capre,64,0.96,91.0,21,21,0,0\n")
+    good.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.96,91.0,21,21,0,0,0\n")
     assert compare(str(good), str(base)) == []
+
+
+def test_update_baseline_refuses_to_shrink_the_gate(tmp_path, capsys):
+    """--update-baseline must not promote a partial sweep: a fresh file
+    missing rows the old baseline guarded fails unless --force."""
+    from benchmarks.compare_predict import main
+
+    header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
+              "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
+              "protected_evictions\n")
+    base = tmp_path / "baseline.csv"
+    base.write_text(header
+                    + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,0\n"
+                    + "bank,auditAll,static-capre,64,prefetch-aware,0.99,98.9,0,0,0,0,0\n")
+    partial = tmp_path / "partial.csv"
+    partial.write_text(header + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,0\n")
+    assert main([str(partial), str(base), "--update-baseline"]) == 1
+    assert "refusing to shrink" in capsys.readouterr().out
+    assert "prefetch-aware" in base.read_text()  # untouched
+    # --force promotes the shrink deliberately; a superset needs no force
+    assert main([str(partial), str(base), "--update-baseline", "--force"]) == 0
+    assert base.read_text() == partial.read_text()
+    grown = tmp_path / "grown.csv"
+    grown.write_text(partial.read_text()
+                     + "bank,auditAll,static-capre,64,prefetch-aware,0.99,98.9,0,0,0,0,0\n")
+    assert main([str(grown), str(base), "--update-baseline"]) == 0
+    assert base.read_text() == grown.read_text()

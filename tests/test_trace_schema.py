@@ -1,0 +1,112 @@
+"""Trace schema v2 round-trips and back-compat (``pos.trace``).
+
+The recorded event stream is the substrate of every offline comparison, so
+its three accepted shapes — ``TraceEvent`` records, serialized tuples, and
+v1 bare-oid lists — must all normalize identically through ``as_events`` /
+``trace_oids``, including the ``write`` and ``method_entry`` kinds that the
+replay engine otherwise only exercises indirectly."""
+
+import json
+
+import pytest
+
+from repro.pos.store import ObjectStore
+from repro.pos.trace import (
+    ACCESS,
+    DEMAND_KINDS,
+    METHOD_ENTRY,
+    WRITE,
+    TraceEvent,
+    access_event,
+    as_events,
+    method_entry_event,
+    trace_oids,
+    write_event,
+)
+
+MIXED = [
+    method_entry_event("Bank.auditAll", 1),
+    access_event(2),
+    write_event(3),
+    access_event(2),
+    method_entry_event("Account.getCustomer", 4),
+    write_event(5),
+]
+
+
+def test_event_constructors_and_kinds():
+    assert access_event(7) == TraceEvent(ACCESS, 7)
+    assert write_event(7) == TraceEvent(WRITE, 7)
+    assert method_entry_event("C.m", 7) == TraceEvent(METHOD_ENTRY, 7, "C.m")
+    assert access_event(7).is_demand and write_event(7).is_demand
+    assert not method_entry_event("C.m", 7).is_demand
+    assert set(DEMAND_KINDS) == {ACCESS, WRITE}
+
+
+def test_to_tuple_round_trips_every_kind():
+    wire = [ev.to_tuple() for ev in MIXED]
+    assert wire[0] == (METHOD_ENTRY, "Bank.auditAll", 1)
+    assert wire[1] == (ACCESS, 2)
+    assert wire[2] == (WRITE, 3)
+    assert as_events(wire) == MIXED
+
+
+def test_to_tuple_survives_json():
+    # the wire form is JSON-friendly (strings and ints only); JSON turns
+    # tuples into lists, so a loader re-tuples before normalizing
+    wire = json.loads(json.dumps([ev.to_tuple() for ev in MIXED]))
+    assert as_events([tuple(item) for item in wire]) == MIXED
+
+
+def test_as_events_accepts_legacy_enter_tuples():
+    legacy = [("enter", "Bank.auditAll", 1), ("access", 2), ("write", 3)]
+    events = as_events(legacy)
+    assert events == [
+        TraceEvent(METHOD_ENTRY, 1, "Bank.auditAll"),
+        TraceEvent(ACCESS, 2),
+        TraceEvent(WRITE, 3),
+    ]
+
+
+def test_as_events_accepts_v1_bare_oid_traces():
+    # every v1 entry was an application-path read
+    assert as_events([5, 6, 5]) == [
+        TraceEvent(ACCESS, 5),
+        TraceEvent(ACCESS, 6),
+        TraceEvent(ACCESS, 5),
+    ]
+
+
+def test_as_events_passes_through_records_and_rejects_junk():
+    assert as_events(MIXED) == MIXED
+    with pytest.raises(TypeError):
+        as_events([("frobnicate", 1)])
+    with pytest.raises(TypeError):
+        as_events([2.5])
+
+
+def test_trace_oids_demand_kinds_and_filters():
+    # method entries are scheduling points, not demand: excluded by default
+    assert trace_oids(MIXED) == [2, 3, 2, 5]
+    assert trace_oids(MIXED, kinds=(ACCESS,)) == [2, 2]
+    assert trace_oids(MIXED, kinds=(WRITE,)) == [3, 5]
+    assert trace_oids(MIXED, kinds=(METHOD_ENTRY,)) == [1, 4]
+    # bare-oid lists pass through unchanged (pre-v2 recorded traces)
+    assert trace_oids([9, 8, 9]) == [9, 8, 9]
+    # mixed wire forms normalize before filtering
+    assert trace_oids([ev.to_tuple() for ev in MIXED]) == [2, 3, 2, 5]
+
+
+def test_recorded_store_trace_round_trips_through_wire_form():
+    """End-to-end: a live store's schema-v2 trace serialized to tuples and
+    normalized back is the identical event stream."""
+    store = ObjectStore(n_services=2)
+    a, b = store.put("X", {}), store.put("X", {})
+    store.trace = []
+    store.app_access(None, a)
+    store.trace_method_entry("X.m", a)
+    store.app_write(b)
+    recorded = list(store.trace)
+    assert [e.kind for e in recorded] == [ACCESS, METHOD_ENTRY, WRITE]
+    assert as_events([e.to_tuple() for e in recorded]) == recorded
+    assert trace_oids(recorded) == [a, b]
