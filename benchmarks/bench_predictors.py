@@ -22,11 +22,14 @@ from __future__ import annotations
 import os
 import statistics
 import time
+import warnings
 
 from repro.pos.client import POSClient
 from repro.predict.evaluate import _catalog
 
-from .common import BENCH_LATENCY, BenchResult, print_results
+from repro.pos.latency import DEFAULT as DEFAULT_LATENCY
+
+from .common import BENCH_LATENCY, BenchResult, print_results, timer_warm_keeper
 
 PREDICTOR_MODES = (
     ("none", None),
@@ -36,83 +39,136 @@ PREDICTOR_MODES = (
     ("hybrid", "hybrid"),
 )
 
+#: oo7 joins the default sweep: its deep assembly fan-out is where batched
+#: per-Data-Service dispatch shows the clearest wall-clock win over one
+#: pool task per oid
+DEFAULT_APPS = ("bank", "bank_write", "wordcount", "kmeans", "oo7")
 
-def run(reps: int = 3, apps=("bank", "bank_write", "wordcount", "kmeans"), modes=PREDICTOR_MODES,
+DISPATCH_MODES = ("per-oid", "batch")
+
+
+#: named latency models the CLI can bench under: "bench" is the historical
+#: paper-table model (one disk arm per DS), "default" is pos.latency.DEFAULT
+#: (4 arms per DS — the model the dispatch acceptance comparison uses)
+LATENCIES = {"bench": BENCH_LATENCY, "default": DEFAULT_LATENCY}
+
+
+def run(reps: int = 3, apps=DEFAULT_APPS, modes=PREDICTOR_MODES,
         n_services: int = 4, parallel_workers: int = 16,
-        cache_capacities=(0,), policies=("lru",), shared_budget: bool = False) -> list[BenchResult]:
+        cache_capacities=(0,), policies=("lru",), shared_budget: bool = False,
+        dispatch_modes=DISPATCH_MODES, latency=BENCH_LATENCY) -> list[BenchResult]:
     catalog = _catalog()
     results: list[BenchResult] = []
-    for app_name in apps:
-        wl = catalog[app_name]
-        for capacity in cache_capacities:
-            for policy in policies:
-                _run_policy(results, wl, app_name, capacity, policy, shared_budget,
-                            modes, reps, n_services, parallel_workers)
+    with timer_warm_keeper():
+        for app_name in apps:
+            wl = catalog[app_name]
+            for capacity in cache_capacities:
+                for policy in policies:
+                    _run_policy(results, wl, app_name, capacity, policy, shared_budget,
+                                modes, reps, n_services, parallel_workers, dispatch_modes,
+                                latency=latency)
     return results
 
 
 def _run_policy(results, wl, app_name, capacity, policy, shared_budget,
-                modes, reps, n_services, parallel_workers) -> None:
-    """One (workload, capacity, policy) cell: bench every mode on a live
-    store running that eviction policy (optionally drawing on a shared
-    global budget rather than per-service capacities)."""
+                modes, reps, n_services, parallel_workers, dispatch_modes,
+                latency=BENCH_LATENCY) -> None:
+    """One (workload, capacity, policy) cell: bench every (mode, dispatch)
+    on a live store running that eviction policy (optionally drawing on a
+    shared global budget rather than per-service capacities).  The
+    no-prefetch reference never dispatches, so it runs once per cell.
+
+    Repetitions are **interleaved across dispatch modes** (rep k of every
+    dispatch runs back-to-back before rep k+1 of any): the per-oid vs
+    batch delta is the quantity this table exists to show, and on a shared
+    box sequential cells pick up machine-load drift larger than the delta
+    itself — pairing the reps in time cancels it."""
     for mode_name, mode in modes:
-        client = POSClient(
-            n_services=n_services, latency=BENCH_LATENCY, cache_capacity=capacity,
-            cache_policy=policy, shared_budget=shared_budget,
-        )
-        client.register(wl.build_app())
-        root = wl.populate(client.store)
-        # monitoring run: record the event trace the miners train
-        # on (schema v2 — method entries, reads and writes; the
-        # miners normalize to the demand-oid sequence themselves)
-        warm_trace = None
-        if mode in ("markov-miner", "hybrid"):
-            client.store.trace = []
-            with client.session(wl.name, mode=None) as s:
-                wl.run_once(s, root)
-            warm_trace = list(client.store.trace)
-            client.store.trace = None
-        times, metrics = [], {}
-        for _ in range(reps):
-            client.store.reset_runtime_state()
-            with client.session(
-                wl.name,
-                mode=mode,
-                rop_depth=2,
-                parallel_workers=parallel_workers,
-                warm_trace=warm_trace,
-            ) as s:
-                t0 = time.perf_counter()
-                wl.run_once(s, root)
-                times.append(time.perf_counter() - t0)
-                s.drain(30.0)
-                metrics = client.store.metrics.snapshot()
-                metrics.update(client.store.prefetch_accuracy())
-                metrics["evictions"] = sum(ds.evictions for ds in client.store.services)
-                if s.predictor is not None:
-                    metrics.update(s.predictor.overhead.snapshot())
-                # after the ledger: the live count lives on the store's
-                # policy, not the predictor's (offline-only) ledger slot
-                metrics["protected_evictions"] = client.store.protected_evictions()
-        metrics["policy"] = policy
-        # shared budget only exists at a bounded capacity (ObjectStore
-        # builds no SharedBudget otherwise) — label what actually ran
-        shared = shared_budget and bool(capacity)
-        cfg = wl.workload if not capacity else f"{wl.workload}_c{capacity}"
-        if policy != "lru" or shared:
-            cfg = f"{cfg}_{policy}" + ("_shared" if shared else "")
-        results.append(
-            BenchResult(
-                benchmark=f"predictors_{app_name}",
-                config=cfg,
-                mode=mode_name,
-                mean_s=statistics.mean(times),
-                stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
-                reps=reps,
-                metrics=metrics,
+        sweeps = dispatch_modes if mode is not None else dispatch_modes[:1]
+        cells = {}
+        for dispatch in sweeps:
+            client = POSClient(
+                n_services=n_services, latency=latency, cache_capacity=capacity,
+                cache_policy=policy, shared_budget=shared_budget,
             )
-        )
+            client.register(wl.build_app())
+            root = wl.populate(client.store)
+            # monitoring run: record the event trace the miners train
+            # on (schema v2 — method entries, reads and writes; the
+            # miners normalize to the demand-oid sequence themselves)
+            warm_trace = None
+            if mode in ("markov-miner", "hybrid"):
+                client.store.trace = []
+                with client.session(wl.name, mode=None) as s:
+                    wl.run_once(s, root)
+                warm_trace = list(client.store.trace)
+                client.store.trace = None
+            cells[dispatch] = (client, root, warm_trace)
+        times = {d: [] for d in sweeps}
+        metrics_by = {d: {} for d in sweeps}
+        for _ in range(reps):
+            for dispatch in sweeps:
+                client, root, warm_trace = cells[dispatch]
+                client.store.reset_runtime_state()
+                with client.session(
+                    wl.name,
+                    mode=mode,
+                    rop_depth=2,
+                    parallel_workers=parallel_workers,
+                    warm_trace=warm_trace,
+                    dispatch=dispatch,
+                ) as s:
+                    t0 = time.perf_counter()
+                    wl.run_once(s, root)
+                    times[dispatch].append(time.perf_counter() - t0)
+                    if not s.drain(30.0):
+                        # a silently ignored timeout here used to let
+                        # straggler prefetch tasks pollute the next rep
+                        warnings.warn(
+                            f"{app_name}/{mode_name}: prefetch drain timed "
+                            "out; metrics for this rep are incomplete",
+                            RuntimeWarning,
+                        )
+                    metrics = client.store.snapshot_metrics()
+                    live_counters = {
+                        k: metrics[k] for k in ("batch_dispatches", "dedup_suppressed")
+                    }
+                    metrics.update(client.store.prefetch_accuracy())
+                    metrics["evictions"] = sum(ds.evictions for ds in client.store.services)
+                    if s.predictor is not None:
+                        metrics.update(s.predictor.overhead.snapshot())
+                    # after the ledger: the live counts live on the store
+                    # (its policies / per-service counters), not the
+                    # predictor's offline-only ledger slots
+                    metrics["protected_evictions"] = client.store.protected_evictions()
+                    metrics.update(live_counters)
+                    metrics_by[dispatch] = metrics
+        for dispatch in sweeps:
+            metrics = metrics_by[dispatch]
+            metrics["policy"] = policy
+            metrics["dispatch"] = dispatch if mode is not None else ""
+            metrics["workload"] = wl.workload
+            metrics["cache_capacity"] = capacity
+            # shared budget only exists at a bounded capacity (ObjectStore
+            # builds no SharedBudget otherwise) — label what actually ran
+            shared = shared_budget and bool(capacity)
+            cfg = wl.workload if not capacity else f"{wl.workload}_c{capacity}"
+            if policy != "lru" or shared:
+                cfg = f"{cfg}_{policy}" + ("_shared" if shared else "")
+            if mode is not None and dispatch != "batch":
+                cfg = f"{cfg}_{dispatch}"
+            results.append(
+                BenchResult(
+                    benchmark=f"predictors_{app_name}",
+                    config=cfg,
+                    mode=mode_name,
+                    mean_s=statistics.mean(times[dispatch]),
+                    stdev_s=(statistics.stdev(times[dispatch])
+                             if len(times[dispatch]) > 1 else 0.0),
+                    reps=reps,
+                    metrics=metrics,
+                )
+            )
 
 
 def write_csv(results: list[BenchResult], path: str = "artifacts/predict/bench.csv") -> str:
@@ -139,6 +195,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--apps", default=",".join(DEFAULT_APPS),
+                    help="comma-separated app names from the catalog")
     ap.add_argument("--cache-capacity", default="0",
                     help="comma-separated per-DS cache capacities to sweep (0 = unbounded)")
     ap.add_argument("--cache-policy", default="lru",
@@ -147,14 +205,23 @@ def main() -> None:
     ap.add_argument("--shared-budget", action="store_true",
                     help="treat --cache-capacity as one global line budget "
                          "shared by all Data Services")
+    ap.add_argument("--dispatch", default=",".join(DISPATCH_MODES),
+                    help="comma-separated prefetch dispatch modes to sweep "
+                         "(per-oid, batch)")
+    ap.add_argument("--latency", default="bench", choices=sorted(LATENCIES),
+                    help="latency model: 'bench' (one disk arm per DS, the "
+                         "historical paper tables) or 'default' "
+                         "(pos.latency.DEFAULT, 4 arms per DS)")
     ap.add_argument("--csv", default="artifacts/predict/bench.csv",
                     help="CSV artifact path ('' disables)")
     args = ap.parse_args()
-    apps = ("bank",) if args.fast else ("bank", "bank_write", "wordcount", "kmeans")
+    apps = ("bank",) if args.fast else tuple(a for a in args.apps.split(",") if a)
     capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
     policies = tuple(p for p in args.cache_policy.split(",") if p)
+    dispatch_modes = tuple(d for d in args.dispatch.split(",") if d)
     results = run(reps=args.reps, apps=apps, cache_capacities=capacities,
-                  policies=policies, shared_budget=args.shared_budget)
+                  policies=policies, shared_budget=args.shared_budget,
+                  dispatch_modes=dispatch_modes, latency=LATENCIES[args.latency])
     print("name,us_per_call,derived")
     print_results(results)
     for r in results:

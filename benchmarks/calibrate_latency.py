@@ -1,0 +1,196 @@
+"""Latency-model calibration report (ROADMAP open item): fit the virtual
+clock against measured wall clock.
+
+The replay engine (``repro.predict.evaluate``) scores predictors on a pure
+arithmetic clock (``pos.latency.REPLAY``), while ``benchmarks/
+bench_predictors`` measures the same (app, predictor) cells with real
+sleeps (``benchmarks.common.BENCH_LATENCY``).  Both express the value of
+prefetching as a *delta against the no-prefetch reference*:
+
+  * simulated: ``baseline_stall_seconds - stall_seconds``  (disk seconds
+    removed from the virtual application's critical path);
+  * measured:  ``mean_s(none) - mean_s(mode)``              (wall seconds
+    removed from the real application thread).
+
+This report joins the two CSVs on (workload, predictor, cache capacity,
+policy, dispatch), fits the least-squares scale ``measured ~ scale *
+simulated`` per app and overall, and writes
+``artifacts/predict/calibration.csv`` with the fitted scales and per-row
+residuals.  A small residual spread means the virtual clock *predicts*
+wall-clock movement — the property the regression gate's
+``timely_coverage`` tolerance implicitly relies on; a drifting scale or a
+fat residual names the (app, predictor) cell where the cost model and the
+implementation disagree.
+
+Usage: PYTHONPATH=src python -m benchmarks.calibrate_latency \
+    [--bench artifacts/predict/bench.csv] [--replay artifacts/predict/replay.csv] \
+    [--out artifacts/predict/calibration.csv]
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+from dataclasses import dataclass
+from typing import Optional
+
+#: bench-mode label -> replay predictor name
+MODE_TO_PREDICTOR = {
+    "rop_d2": "rop",
+    "capre": "static-capre",
+    "markov": "markov-miner",
+    "hybrid": "hybrid",
+}
+
+CAL_COLUMNS = (
+    "app", "workload", "predictor", "dispatch", "cache_capacity", "policy",
+    "measured_delta_s", "simulated_delta_s", "scale_app", "scale_global",
+    "predicted_delta_s", "residual_s",
+)
+
+
+@dataclass
+class Pair:
+    app: str
+    workload: str
+    predictor: str
+    dispatch: str
+    cache_capacity: str
+    policy: str
+    measured: float  # wall seconds saved vs the no-prefetch run
+    simulated: float  # virtual stall seconds saved vs the no-prefetch replay
+
+
+def _read(path: str) -> list[dict]:
+    with open(path, newline="") as f:
+        return list(csv.DictReader(f))
+
+
+def _bench_cells(rows: list[dict]) -> dict:
+    """(app, workload, capacity, policy, mode, dispatch) -> mean_s, plus the
+    no-prefetch reference per (app, workload, capacity, policy)."""
+    cells: dict = {}
+    for r in rows:
+        if not r.get("benchmark", "").startswith("predictors_"):
+            continue
+        app = r["benchmark"][len("predictors_"):]
+        key = (
+            app,
+            r.get("workload") or r["config"],
+            r.get("cache_capacity") or "0",
+            r.get("policy") or "lru",
+            r["mode"],
+            r.get("dispatch") or "",
+        )
+        cells[key] = float(r["mean_s"])
+    return cells
+
+
+def collect_pairs(bench_rows: list[dict], replay_rows: list[dict]) -> list[Pair]:
+    bench = _bench_cells(bench_rows)
+    none_ref = {k[:4]: v for k, v in bench.items() if k[4] == "none"}
+    pairs: list[Pair] = []
+    for r in replay_rows:
+        predictor = r["predictor"]
+        mode = next((m for m, p in MODE_TO_PREDICTOR.items() if p == predictor), None)
+        if mode is None or not r.get("stall_seconds"):
+            continue
+        app_key = r["app"]
+        # the mutating bank traversal benches under its own catalog key
+        if r["workload"] == "setAllTransCustomers":
+            app_key = "bank_write"
+        cell = (app_key, r["workload"], r.get("cache_capacity") or "0",
+                r.get("policy") or "lru", mode, r.get("dispatch") or "")
+        if cell not in bench or cell[:4] not in none_ref:
+            continue
+        simulated = float(r["baseline_stall_seconds"]) - float(r["stall_seconds"])
+        measured = none_ref[cell[:4]] - bench[cell]
+        pairs.append(Pair(app_key, r["workload"], predictor, cell[5],
+                          cell[2], cell[3], measured, simulated))
+    return pairs
+
+
+def _fit(pairs: list[Pair]) -> Optional[float]:
+    """Least-squares through the origin: measured ~ scale * simulated."""
+    num = sum(p.measured * p.simulated for p in pairs)
+    den = sum(p.simulated * p.simulated for p in pairs)
+    return num / den if den else None
+
+
+def write_report(pairs: list[Pair], out_path: str) -> str:
+    scale_global = _fit(pairs)
+    by_app: dict[str, list[Pair]] = {}
+    for p in pairs:
+        by_app.setdefault(p.app, []).append(p)
+    app_scales = {app: _fit(ps) for app, ps in by_app.items()}
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w", newline="") as f:
+        writer = csv.writer(f)
+        writer.writerow(CAL_COLUMNS)
+        for p in sorted(pairs, key=lambda p: (p.app, p.workload, p.predictor,
+                                              p.dispatch, p.cache_capacity)):
+            scale_app = app_scales.get(p.app)
+            predicted = (scale_app or 0.0) * p.simulated
+            writer.writerow([
+                p.app, p.workload, p.predictor, p.dispatch, p.cache_capacity,
+                p.policy, f"{p.measured:.6f}", f"{p.simulated:.6f}",
+                "" if scale_app is None else f"{scale_app:.4f}",
+                "" if scale_global is None else f"{scale_global:.4f}",
+                f"{predicted:.6f}", f"{p.measured - predicted:.6f}",
+            ])
+    return out_path
+
+
+def summarize(pairs: list[Pair]) -> str:
+    lines = []
+    scale_global = _fit(pairs)
+    by_app: dict[str, list[Pair]] = {}
+    for p in pairs:
+        by_app.setdefault(p.app, []).append(p)
+    for app, ps in sorted(by_app.items()):
+        scale = _fit(ps)
+        if scale is None:
+            lines.append(f"{app}: no simulated signal (all deltas 0)")
+            continue
+        resid = [p.measured - scale * p.simulated for p in ps]
+        worst = max(zip((abs(r) for r in resid), ps))
+        lines.append(
+            f"{app}: scale={scale:.3f} over {len(ps)} cells, "
+            f"max |residual| {worst[0] * 1e3:.2f}ms "
+            f"({worst[1].predictor}/{worst[1].dispatch or '-'})"
+        )
+    if scale_global is not None:
+        lines.append(f"global: scale={scale_global:.3f} over {len(pairs)} cells "
+                     "(measured wall delta per simulated stall delta)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="artifacts/predict/bench.csv",
+                    help="bench_predictors CSV (measured wall clock)")
+    ap.add_argument("--replay", default="artifacts/predict/replay.csv",
+                    help="evaluate.py CSV (virtual clock)")
+    ap.add_argument("--out", default="artifacts/predict/calibration.csv")
+    args = ap.parse_args(argv)
+    for path in (args.bench, args.replay):
+        if not os.path.exists(path):
+            print(f"calibrate_latency: missing input {path} — run "
+                  "benchmarks.bench_predictors / repro.predict.evaluate first")
+            return 1
+    pairs = collect_pairs(_read(args.bench), _read(args.replay))
+    if not pairs:
+        print("calibrate_latency: no joinable (app, predictor) cells between "
+              f"{args.bench} and {args.replay} (sweep capacities/policies/"
+              "dispatch must overlap)")
+        return 1
+    print(summarize(pairs))
+    print(f"# wrote {write_report(pairs, args.out)} ({len(pairs)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

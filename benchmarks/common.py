@@ -8,7 +8,9 @@ like the paper's injected executor)."""
 
 from __future__ import annotations
 
+import contextlib
 import statistics
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional
@@ -26,6 +28,36 @@ from repro.pos.latency import LatencyModel
 BENCH_LATENCY = LatencyModel(
     disk_load=300e-6, remote_hop=120e-6, write_back=900e-6, think=100e-6, parallel_per_ds=1
 )
+
+@contextlib.contextmanager
+def timer_warm_keeper():
+    """Keep one core busy (GIL-yielding spin) for the duration of a
+    benchmark so timed-sleep wakeups are uniformly cheap across modes.
+
+    On virtualized / idle-capable hosts, waking a ``time.sleep`` from an
+    *idle* CPU costs ~0.5-1 ms extra versus preempting a busy one.  A
+    dispatch mode that schedules thousands of tiny background tasks keeps
+    the CPUs accidentally warm and gets fast wakeups; an efficient mode
+    that leaves the CPUs idle gets punished on every application think
+    sleep — measured on OO7, this idle-exit tax was larger than the entire
+    between-mode difference.  Spinning one yielding thread makes sleep
+    latency a constant, so mode deltas reflect the code under test."""
+    stop = threading.Event()
+
+    def spin() -> None:
+        while not stop.is_set():
+            for _ in range(1000):
+                pass
+            time.sleep(0)  # release the GIL every burst
+
+    th = threading.Thread(target=spin, name="bench-warm", daemon=True)
+    th.start()
+    try:
+        yield
+    finally:
+        stop.set()
+        th.join(timeout=1.0)
+
 
 MODES = (
     ("none", None, 0),
@@ -73,37 +105,45 @@ def run_modes(
     """Build one store per mode (placement identical: same seeds), run
     ``reps`` cold-cache repetitions, return one result per mode."""
     out: list[BenchResult] = []
-    for mode_name, mode, depth in modes:
-        client = POSClient(n_services=n_services, latency=BENCH_LATENCY)
-        client.register(build_app())
-        root = populate(client.store)
-        times = []
-        metrics = {}
-        for _ in range(reps):
-            client.store.reset_runtime_state()
-            with client.session(
-                client.logic_module.registered and list(client.logic_module.registered)[0],
-                mode=mode,
-                rop_depth=depth,
-                parallel_workers=parallel_workers,
-            ) as s:
-                t0 = time.perf_counter()
-                run_once(s, root)
-                times.append(time.perf_counter() - t0)
-                s.drain(30.0)
-                metrics = client.store.metrics.snapshot()
-                metrics.update(client.store.prefetch_accuracy())
-        out.append(
-            BenchResult(
-                benchmark=benchmark,
-                config=config,
-                mode=mode_name,
-                mean_s=statistics.mean(times),
-                stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
-                reps=reps,
-                metrics=metrics,
+    with timer_warm_keeper():
+        for mode_name, mode, depth in modes:
+            client = POSClient(n_services=n_services, latency=BENCH_LATENCY)
+            client.register(build_app())
+            root = populate(client.store)
+            times = []
+            metrics = {}
+            for _ in range(reps):
+                client.store.reset_runtime_state()
+                with client.session(
+                    client.logic_module.registered and list(client.logic_module.registered)[0],
+                    mode=mode,
+                    rop_depth=depth,
+                    parallel_workers=parallel_workers,
+                ) as s:
+                    t0 = time.perf_counter()
+                    run_once(s, root)
+                    times.append(time.perf_counter() - t0)
+                    if not s.drain(30.0):
+                        import warnings
+
+                        warnings.warn(
+                            f"{benchmark}/{config}/{mode_name}: prefetch drain "
+                            "timed out; metrics for this rep are incomplete",
+                            RuntimeWarning,
+                        )
+                    metrics = client.store.snapshot_metrics()
+                    metrics.update(client.store.prefetch_accuracy())
+            out.append(
+                BenchResult(
+                    benchmark=benchmark,
+                    config=config,
+                    mode=mode_name,
+                    mean_s=statistics.mean(times),
+                    stdev_s=statistics.stdev(times) if len(times) > 1 else 0.0,
+                    reps=reps,
+                    metrics=metrics,
+                )
             )
-        )
     return out
 
 

@@ -23,7 +23,12 @@ the scoring loop), so equality-modulo-tolerance is a meaningful check:
   * rows are keyed per eviction policy too (``policy`` column; a pre-policy
     file without the column reads as all-``lru``), and the fresh header
     must carry the policy columns (``policy``, ``protected_evictions``) —
-    a harness that silently dropped the policy sweep fails the gate.
+    a harness that silently dropped the policy sweep fails the gate;
+  * rows are keyed per dispatch mode as well (``dispatch`` column; a
+    pre-batching file reads as all-``per-oid``), and the fresh header must
+    carry the dispatch columns (``dispatch``, ``batch_dispatches``,
+    ``dedup_suppressed``) — both dispatch modes are gated so neither the
+    batched path nor the per-oid reference can silently regress.
 
 ``--update-baseline`` regenerates the committed baseline in place from the
 fresh file — required in the same PR as any intentional column or metric
@@ -42,7 +47,8 @@ from __future__ import annotations
 import csv
 import sys
 
-Key = tuple[str, str, str, str, str]  # (app, workload, predictor, cache_capacity, policy)
+# (app, workload, predictor, cache_capacity, policy, dispatch)
+Key = tuple[str, str, str, str, str, str]
 
 #: the write-path columns the v2 trace schema added — a replay.csv missing
 #: them was produced by a pre-write-path harness and must fail the gate
@@ -51,6 +57,10 @@ WRITE_COLUMNS = ("writes", "write_hits", "dirty_evictions", "flushed_writes")
 #: the eviction-policy columns — a replay.csv missing them was produced by
 #: a pre-policy harness (hard-coded LRU) and must fail the gate
 POLICY_COLUMNS = ("policy", "protected_evictions")
+
+#: the dispatch columns — a replay.csv missing them was produced before the
+#: batched dispatch layer existed (per-oid only) and must fail the gate
+DISPATCH_COLUMNS = ("dispatch", "batch_dispatches", "dedup_suppressed")
 
 
 def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
@@ -61,7 +71,7 @@ def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
     return (
         {
             (r["app"], r["workload"], r["predictor"], r["cache_capacity"],
-             r.get("policy") or "lru"): r
+             r.get("policy") or "lru", r.get("dispatch") or "per-oid"): r
             for r in rows
         },
         fields,
@@ -84,9 +94,15 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> l
             f"{current_path}: eviction-policy columns missing from header: "
             f"{', '.join(missing_cols)}"
         )
+    missing_cols = [c for c in DISPATCH_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: dispatch columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
     for key in sorted(baseline):
-        app, workload, predictor, cap, policy = key
-        label = f"{app}/{workload}/{predictor}@cache={cap}/{policy}"
+        app, workload, predictor, cap, policy, dispatch = key
+        label = f"{app}/{workload}/{predictor}@cache={cap}/{policy}/{dispatch}"
         base_tc = baseline[key].get("timely_coverage")
         if not base_tc:
             continue  # baseline never scored this row; nothing to hold it to
@@ -152,9 +168,9 @@ def main(argv=None) -> int:
             print(f"  {msg}")
         return 1
     cur, _ = _load(args.current)
-    for (app, workload, pred, cap, policy), r in sorted(cur.items()):
+    for (app, workload, pred, cap, policy, dispatch), r in sorted(cur.items()):
         if pred == "static-capre":
-            print(f"ok {app}/{workload}/static-capre@cache={cap}/{policy}: "
+            print(f"ok {app}/{workload}/static-capre@cache={cap}/{policy}/{dispatch}: "
                   f"timely_coverage={r['timely_coverage']} stall_saved={r['stall_saved_pct']}%")
     print(f"prediction timeliness: {len(cur)} rows within tolerance of baseline")
     return 0

@@ -39,12 +39,12 @@ def main() -> None:
             s.execute(root, "setAllTransCustomers")
             wall = time.perf_counter() - t0
             s.drain(10.0)
-        m = client.store.metrics
+        m = client.store.snapshot_metrics()
         acc = client.store.prefetch_accuracy()
         label = mode or "no prefetch"
         print(f"  {label:12s}: {wall*1e3:7.1f} ms  "
-              f"misses={m.app_cache_misses:5d} hits={m.app_cache_hits:5d} "
-              f"prefetched={m.prefetch_loads:5d} recall={acc['recall']:.2f}")
+              f"misses={m['app_cache_misses']:5d} hits={m['app_cache_hits']:5d} "
+              f"prefetched={m['prefetch_loads']:5d} recall={acc['recall']:.2f}")
 
 
 if __name__ == "__main__":

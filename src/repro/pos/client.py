@@ -68,11 +68,19 @@ class LogicModule:
         return reg
 
 
+#: how predicted oids become prefetch work: "batch" groups a prediction by
+#: owning Data Service and submits one deduped, need-ordered batch task per
+#: service (the default); "per-oid" is the historical one-task-per-object
+#: dispatch, kept for A/B sweeps (``bench_predictors --dispatch``)
+DISPATCH_MODES = ("batch", "per-oid")
+
+
 @dataclass
 class SessionConfig:
     mode: Optional[str] = None  # None or any repro.predict registry name
     rop_depth: int = 1
     parallel_workers: int = 8
+    dispatch: str = "batch"  # see DISPATCH_MODES
     # trace-mined predictors (markov-miner / hybrid)
     markov_order: int = 2
     markov_confidence: float = 0.25
@@ -88,7 +96,15 @@ class Session:
         self.reg = reg
         self.app = reg.app
         self.config = config or SessionConfig()
+        if self.config.dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"unknown dispatch mode {self.config.dispatch!r}; "
+                f"expected one of {DISPATCH_MODES}"
+            )
         self.runtime = PrefetchRuntime(parallel_workers=self.config.parallel_workers)
+        # the store drains registered runtimes in reset_runtime_state so
+        # straggler prefetch tasks cannot leak across benchmark repetitions
+        store.register_runtime(self.runtime)
         # Save whatever listeners are already installed (another session's
         # monitoring) instead of clobbering them: a predictor bound below
         # may overwrite them, and close() puts the saved ones back.  A
@@ -132,6 +148,7 @@ class Session:
             if owner is None or owner.session is not None:
                 setattr(self.store, attr, saved)
         self.runtime.shutdown()
+        self.store.unregister_runtime(self.runtime)
 
     def __enter__(self):
         return self

@@ -11,11 +11,20 @@ Mirrors the generated Java code:
     number of cores).  Fan-out tasks are non-blocking — a task loads its
     object and submits its children — so nested collections cannot starve
     the bounded pool.
+
+Dispatch granularity is the caller's choice: ``fan_out`` submits one task
+per item (the historical per-oid dispatch), ``submit`` submits a single
+task for an already-grouped batch (``ObjectStore.prefetch_batch`` uses one
+per Data Service).  Every submission is tracked so ``drain`` knows when the
+runtime is idle, and ``hard_drain`` can cancel work that never started —
+straggler tasks from one benchmark repetition used to keep running into
+the next because ``drain``'s timeout result was silently ignored.
 """
 
 from __future__ import annotations
 
 import threading
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 
 
@@ -27,13 +36,16 @@ class PrefetchRuntime:
         self._lock = threading.Lock()
         self._idle = threading.Event()
         self._idle.set()
+        self._futures: set = set()
         self.scheduled = 0
+        self.submitted_tasks = 0  # every executor submission (sched + pool)
 
     # -- task accounting -----------------------------------------------------
 
     def _inc(self) -> None:
         with self._lock:
             self._outstanding += 1
+            self.submitted_tasks += 1
             self._idle.clear()
 
     def _dec(self) -> None:
@@ -48,6 +60,18 @@ class PrefetchRuntime:
         finally:
             self._dec()
 
+    def _track(self, fut) -> None:
+        with self._lock:
+            self._futures.add(fut)
+        fut.add_done_callback(self._untrack)
+
+    def _untrack(self, fut) -> None:
+        with self._lock:
+            self._futures.discard(fut)
+        if fut.cancelled():
+            # the wrapped fn never ran, so its _dec never fired
+            self._dec()
+
     # -- API -----------------------------------------------------------------
 
     def schedule(self, fn) -> None:
@@ -55,20 +79,48 @@ class PrefetchRuntime:
         (the paper's injected ``prefetchingExecutor.submit``)."""
         self.scheduled += 1
         self._inc()
-        self._scheduler.submit(self._wrap, fn)
+        self._track(self._scheduler.submit(self._wrap, fn))
+
+    def submit(self, fn, *args) -> None:
+        """Submit ONE task to the shared parallel pool — the batched
+        dispatch entry point (one grouped request per Data Service instead
+        of one task per oid).  Non-blocking."""
+        self._inc()
+        self._track(self._pool.submit(self._wrap, fn, *args))
 
     def fan_out(self, fn, items) -> None:
         """Parallel-streams analogue: run ``fn(item)`` on the shared pool.
         Non-blocking: returns immediately."""
         for it in items:
             self._inc()
-            self._pool.submit(self._wrap, fn, it)
+            self._track(self._pool.submit(self._wrap, fn, it))
 
     def drain(self, timeout: float = 60.0) -> bool:
-        """Wait until all scheduled prefetch work has finished."""
+        """Wait until all scheduled prefetch work has finished.  Returns
+        False on timeout — callers that reset shared state next should
+        treat that as a leak (see ``hard_drain``)."""
         return self._idle.wait(timeout)
 
-    def shutdown(self) -> None:
-        self.drain(timeout=5.0)
+    def hard_drain(self, timeout: float = 5.0) -> bool:
+        """Drain, and on timeout cancel every queued-but-unstarted task so
+        stragglers cannot touch store state later.  Already-running tasks
+        cannot be interrupted — the final wait gives them ``timeout`` more
+        seconds to finish."""
+        if self._idle.wait(timeout):
+            return True
+        with self._lock:
+            pending = list(self._futures)
+        for fut in pending:
+            fut.cancel()
+        return self._idle.wait(timeout)
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        if not self.hard_drain(timeout):
+            warnings.warn(
+                f"prefetch runtime still busy after {timeout}s at shutdown; "
+                "running straggler tasks will be awaited by the executor",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         self._scheduler.shutdown(wait=True, cancel_futures=True)
         self._pool.shutdown(wait=True, cancel_futures=True)

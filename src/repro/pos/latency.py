@@ -27,6 +27,12 @@ class LatencyModel:
     write_back: float = 350e-6  # storing an updated object
     think: float = 100e-6  # per-object application processing time
     parallel_per_ds: int = 4  # concurrent disk loads per DS (4-core nodes)
+    # per-task submission cost of the prefetch executor — only consulted by
+    # the virtual clock (the live store pays it for real in Python executor
+    # overhead): each dispatch serializes on the submitting side, so a
+    # per-oid dispatcher issues its i-th load ~i*dispatch_overhead late,
+    # while a batched dispatcher pays it once per Data-Service batch
+    dispatch_overhead: float = 0.0
 
     def sleep(self, seconds: float) -> None:
         if seconds >= _MIN_SLEEP:
@@ -82,6 +88,14 @@ class VirtualDisk:
         self.loads += 1
         return self._occupy(t, self.latency.disk_load)
 
+    def schedule_batch(self, t: float, n: int) -> list[tuple[float, float]]:
+        """Schedule ``n`` disk loads, all requested at virtual time ``t`` —
+        one batched prefetch request pipelining through the service's slots.
+        Identical slot arithmetic to ``n`` separate ``schedule`` calls; the
+        batching win is modeled at the *dispatch* layer (one
+        ``dispatch_overhead`` charge per batch instead of per oid)."""
+        return [self.schedule(t) for _ in range(n)]
+
     def schedule_write_back(self, t: float) -> tuple[float, float]:
         """Schedule one write-back (dirty-eviction flush) requested at
         virtual time ``t``.  Write-backs occupy the *same* service slots as
@@ -101,5 +115,6 @@ class VirtualDisk:
 # consumption rate, so a predictor with enough lead CAN fully hide the disk:
 # timeliness, not bandwidth, is what the replay measures.
 REPLAY = LatencyModel(
-    disk_load=2e-3, remote_hop=120e-6, write_back=4e-3, think=250e-6, parallel_per_ds=2
+    disk_load=2e-3, remote_hop=120e-6, write_back=4e-3, think=250e-6, parallel_per_ds=2,
+    dispatch_overhead=50e-6,
 )

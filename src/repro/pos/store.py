@@ -34,6 +34,20 @@ class PersistentObject:
     fields: dict[str, Any] = field(default_factory=dict)  # refs: oid / [oid]; prims: value
 
 
+class _SlotRelease:
+    """Context manager releasing an already-acquired semaphore slot."""
+
+    def __init__(self, sem: threading.Semaphore):
+        self._sem = sem
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self._sem.release()
+        return False
+
+
 class DataService:
     def __init__(self, ds_id: int, latency: LatencyModel, cache_capacity: int = 0,
                  policy: str = DEFAULT_POLICY, budget: Optional[SharedBudget] = None):
@@ -56,6 +70,13 @@ class DataService:
         )
         self._cache_lock = budget.lock if budget is not None else threading.Lock()
         self._slots = threading.Semaphore(max(1, latency.parallel_per_ds))
+        # application threads queued for a disk slot: background prefetch
+        # yields to them (see _yield_to_demand) — a hot batch lane
+        # re-acquiring the slot semaphore would otherwise starve a woken
+        # demand waiter indefinitely (semaphores are not FIFO-fair)
+        self._demand_waiting = 0
+        self._demand_clear = threading.Event()
+        self._demand_clear.set()
         # request coalescing: concurrent loads of the same object share one
         # disk read — the second requester waits out the remaining latency
         self._inflight: dict[int, threading.Event] = {}
@@ -66,6 +87,15 @@ class DataService:
         self.evictions = 0
         self.dirty_evictions = 0
         self.flushed_writes = 0
+        # per-service prefetch counters (updated under this service's cache
+        # lock) — the prefetch path used to charge the store-wide metrics
+        # lock per oid, contending with the application thread; now each
+        # service counts locally and ``ObjectStore.snapshot_metrics``
+        # aggregates on read
+        self.prefetch_requests = 0  # oids prefetch looked at (incl. cache hits)
+        self.prefetch_loads = 0  # disk loads performed by prefetch work
+        self.batch_dispatches = 0  # prefetch tasks submitted for this service
+        self.dedup_suppressed = 0  # oids suppressed pre-submission (cached/in-flight/dup)
         # set by the owning ObjectStore so flush/eviction events land on
         # the shared StoreMetrics too (None for a standalone DataService)
         self._owner: Optional["ObjectStore"] = None
@@ -123,11 +153,39 @@ class DataService:
         self.evictions = 0
         self.dirty_evictions = 0
         self.flushed_writes = 0
+        self.prefetch_requests = 0
+        self.prefetch_loads = 0
+        self.batch_dispatches = 0
+        self.dedup_suppressed = 0
         self.policy.protected_evictions = 0
 
     def is_cached(self, oid: int) -> bool:
         with self._cache_lock:
             return oid in self.cache
+
+    def _yield_to_demand(self) -> None:
+        """Background prefetch work parks until no application thread is
+        waiting for one of this service's disk slots — the paper's contract
+        ('the application thread is never interrupted') applied to the disk
+        queue: demand loads have strict priority over prefetch loads.  The
+        5s timeout is purely defensive (a stuck demand waiter must not hang
+        the prefetcher forever)."""
+        if self._demand_waiting:
+            self._demand_clear.wait(5.0)
+
+    def _demand_slot(self):
+        """Acquire a disk slot for an application (demand) load, flagging
+        the wait so background prefetch yields the queue.  Returns a
+        context manager holding the slot."""
+        with self._cache_lock:
+            self._demand_waiting += 1
+            self._demand_clear.clear()
+        self._slots.acquire()
+        with self._cache_lock:
+            self._demand_waiting -= 1
+            if self._demand_waiting == 0:
+                self._demand_clear.set()
+        return _SlotRelease(self._slots)
 
     def load_into_memory(self, oid: int, prefetch: bool = False) -> bool:
         """Disk -> memory. Returns True if this call performed the disk load
@@ -171,7 +229,13 @@ class DataService:
                     self._inflight.pop(oid, None)
         flushes = []
         try:
-            with self._slots:
+            if prefetch:
+                # background load: let queued application loads go first
+                self._yield_to_demand()
+                slot = self._slots
+            else:
+                slot = self._demand_slot()
+            with slot:
                 self.latency.sleep(self.latency.disk_load)
             with self._cache_lock:
                 flushes = self._touch(oid, prefetch=prefetch)
@@ -182,6 +246,106 @@ class DataService:
         for vds, victim in flushes:
             vds._flush(victim)
         return True
+
+    # -- batched prefetch dispatch ------------------------------------------
+
+    def claim_prefetch_batch(self, oids: Iterable[int]) -> list[int]:
+        """Dedupe a prefetch batch against cache and in-flight loads under
+        ONE cache-lock acquisition (the per-oid path paid a lock round trip
+        per object just to discover most of them were already resident).
+        Already-cached oids get their policy bump (a prefetch touch, like
+        the per-oid path's hit) and are suppressed; in-flight oids are
+        suppressed outright (their load is coming).  Returns the oids still
+        worth submitting, in request (= predicted-need) order.  Counters
+        (``prefetch_requests`` / ``dedup_suppressed`` / ``batch_dispatches``)
+        are charged here, under the same lock hold."""
+        todo: list[int] = []
+        claimed: set[int] = set()
+        with self._cache_lock:
+            for oid in oids:
+                self.prefetch_requests += 1
+                if oid in claimed:
+                    self.dedup_suppressed += 1  # duplicate within the batch
+                elif oid in self.cache:
+                    # resident: bump only (cannot overflow — no insert)
+                    self.policy.note_access(oid, prefetch=True)
+                    self.dedup_suppressed += 1
+                elif oid in self._inflight:
+                    self.dedup_suppressed += 1
+                else:
+                    claimed.add(oid)
+                    todo.append(oid)
+            if todo:
+                self.batch_dispatches += 1
+        return todo
+
+    def load_batch(self, oids: Iterable[int], prefetch: bool = True,
+                   pool=None) -> None:
+        """Load a batch of objects disk -> memory in request order,
+        pipelining through this service's ``parallel_per_ds`` slots: with a
+        pool, the batch splits into one lane per slot (strided, so the
+        earliest-needed oids start first on every lane); without one, the
+        calling worker drains the batch alone.  Unlike the per-oid path
+        there is no per-object task submission and no store-wide
+        metrics-lock traffic — landing a load costs one cache-lock
+        acquisition (policy touch + in-flight clear together)."""
+        oids = list(oids)
+        lanes = max(1, min(self.latency.parallel_per_ds, len(oids)))
+        if pool is not None and lanes > 1:
+            for i in range(1, lanes):
+                pool.submit(self._load_lane, oids[i::lanes], prefetch)
+            self._load_lane(oids[0::lanes], prefetch)
+        else:
+            self._load_lane(oids, prefetch)
+
+    #: loads claimed/slept/landed per lane iteration: one slot hold, one
+    #: claim lock, one land lock per chunk (instead of per oid); bounds how
+    #: long a demand access coalescing onto a claimed oid can wait
+    _LANE_CHUNK = 4
+
+    def _load_lane(self, oids: list[int], prefetch: bool) -> None:
+        """One pipeline lane of a batched load: claim a chunk under one
+        lock, occupy a disk arm for the chunk's sequential loads, land the
+        chunk under one lock.  Oids that became resident (or in flight
+        elsewhere) since the batch was deduped are skipped at claim time."""
+        pending = list(oids)
+        while pending:
+            # the lane re-acquires the slot back-to-back; without this
+            # yield a waiting demand load would lose every race for it
+            self._yield_to_demand()
+            chunk: list[tuple[int, threading.Event]] = []
+            with self._cache_lock:
+                while pending and len(chunk) < self._LANE_CHUNK:
+                    oid = pending.pop(0)
+                    if oid in self.cache:
+                        # landed since the dispatch snapshot: bump, move on
+                        self.policy.note_access(oid, prefetch=prefetch)
+                    elif oid not in self._inflight:  # else: another loader owns it
+                        ev = threading.Event()
+                        self._inflight[oid] = ev
+                        chunk.append((oid, ev))
+            if not chunk:
+                continue
+            flushes: list[tuple[DataService, int]] = []
+            try:
+                with self._slots:
+                    # k sequential loads pipelined on one disk arm
+                    self.latency.sleep(self.latency.disk_load * len(chunk))
+                with self._cache_lock:
+                    for oid, _ev in chunk:
+                        flushes.extend(self._touch(oid, prefetch=prefetch))
+                        self._inflight.pop(oid, None)
+                        self.prefetch_loads += 1
+            except BaseException:
+                with self._cache_lock:
+                    for oid, _ev in chunk:
+                        self._inflight.pop(oid, None)
+                raise
+            finally:
+                for _oid, ev in chunk:
+                    ev.set()
+            for vds, victim in flushes:
+                vds._flush(victim)
 
     def write(self, oid: int) -> bool:
         """Write-allocate + write-back: ensure the object is in memory (a
@@ -234,8 +398,24 @@ def prefetch_accuracy(prefetched: set, accessed: set) -> dict:
     }
 
 
+#: the prefetch-path counters that live on each DataService (the prefetch
+#: path no longer touches the store-wide metrics lock); aggregated across
+#: services by ``ObjectStore.snapshot_metrics``
+PREFETCH_COUNTERS = (
+    "prefetch_requests",
+    "prefetch_loads",
+    "batch_dispatches",
+    "dedup_suppressed",
+)
+
+
 @dataclass
 class StoreMetrics:
+    """Application-path counters (guarded by the store's metrics lock).
+    Prefetch-path counters are per-service (``PREFETCH_COUNTERS``) so the
+    background prefetch threads never contend with the application thread
+    on this lock — read them via ``ObjectStore.snapshot_metrics``."""
+
     app_loads: int = 0
     app_cache_hits: int = 0
     app_cache_misses: int = 0
@@ -244,8 +424,6 @@ class StoreMetrics:
     write_hits: int = 0  # writes that found the object already in memory
     dirty_evictions: int = 0  # evictions that had to flush a dirty object
     flushed_writes: int = 0  # write-backs actually performed (evict + drop)
-    prefetch_loads: int = 0  # disk loads performed by prefetch threads
-    prefetch_requests: int = 0  # objects prefetch looked at (incl. cache hits)
 
     def snapshot(self) -> dict[str, int]:
         return dict(self.__dict__)
@@ -289,9 +467,16 @@ class ObjectStore:
         self._rr = itertools.count()
         self._metrics_lock = threading.Lock()
         self.metrics = StoreMetrics()
-        # accuracy accounting (true/false positives of prefetching)
+        # accuracy accounting (true/false positives of prefetching) — the
+        # prefetched set has its own lock so prefetch threads recording
+        # their work never block the application thread's metrics updates
+        self._prefetch_lock = threading.Lock()
         self.accessed_oids: set[int] = set()
         self.prefetched_oids: set[int] = set()
+        # live PrefetchRuntimes attached by Sessions: reset_runtime_state
+        # drains them so straggler prefetch tasks from one benchmark
+        # repetition cannot leak work into the next
+        self._runtimes: set = set()
         # set to [] to record the application's event stream as schema-v2
         # TraceEvent records (access / write / method_entry — pos.trace)
         self.trace: Optional[list[TraceEvent]] = None
@@ -409,22 +594,83 @@ class ObjectStore:
     # -- prefetch-path access ----------------------------------------------
 
     def prefetch_access(self, oid: int) -> PersistentObject:
-        """Load ``oid`` into its own Data Service's memory (no execution
-        redirection: 'dataClay ... loads the object where it is stored')."""
+        """Per-oid prefetch: load ``oid`` into its own Data Service's memory
+        (no execution redirection: 'dataClay ... loads the object where it
+        is stored').  This is the legacy one-task-per-oid dispatch target
+        (``dispatch="per-oid"``); each call was one executor submission, so
+        it also counts one ``batch_dispatches``."""
         ds = self.service_of(oid)
         did_load = ds.load_into_memory(oid, prefetch=True)
-        with self._metrics_lock:
-            self.metrics.prefetch_requests += 1
+        with ds._cache_lock:
+            ds.prefetch_requests += 1
+            ds.batch_dispatches += 1
             if did_load:
-                self.metrics.prefetch_loads += 1
+                ds.prefetch_loads += 1
+        with self._prefetch_lock:
             self.prefetched_oids.add(oid)
         return ds.disk[oid]
+
+    def prefetch_batch(self, oids: Iterable[int], runtime=None) -> int:
+        """Batched, placement-aware prefetch dispatch: group the predicted
+        ``oids`` (already in predicted-need order) by owning Data Service,
+        dedupe each group against that service's cache *and* in-flight loads
+        under one snapshot read, and submit **one batch task per Data
+        Service** whose worker pipelines the surviving loads through the
+        service's ``parallel_per_ds`` slots.  All requested oids count as
+        prefetched for accuracy (exactly what the per-oid path records);
+        suppressed ones are tallied in the per-service ``dedup_suppressed``.
+        Without a ``runtime`` the batches load on the calling thread.
+        Returns the number of batch tasks submitted."""
+        groups: dict[int, list[int]] = {}
+        for oid in oids:
+            groups.setdefault(self._placement[oid], []).append(oid)
+        if not groups:
+            return 0
+        with self._prefetch_lock:
+            for batch in groups.values():
+                self.prefetched_oids.update(batch)
+        submitted = 0
+        for ds_id, batch in groups.items():
+            ds = self.services[ds_id]
+            todo = ds.claim_prefetch_batch(batch)
+            if not todo:
+                continue
+            submitted += 1
+            if runtime is not None:
+                runtime.submit(ds.load_batch, todo, True, runtime)
+            else:
+                ds.load_batch(todo)
+        return submitted
 
     def peek(self, oid: int) -> PersistentObject:
         """Read a record without cost accounting (builders / assertions)."""
         return self.record(oid)
 
     # -- bookkeeping ---------------------------------------------------------
+
+    def snapshot_metrics(self) -> dict[str, int]:
+        """One coherent metrics read: the application-path ``StoreMetrics``
+        plus the per-service prefetch counters summed across Data Services
+        (the per-oid prefetch path used to update the store-wide metrics
+        under the same lock the application thread takes on every access —
+        aggregation now happens here, on read, instead)."""
+        with self._metrics_lock:
+            out = self.metrics.snapshot()
+        for key in PREFETCH_COUNTERS:
+            out[key] = 0
+        for ds in self.services:
+            with ds._cache_lock:
+                for key in PREFETCH_COUNTERS:
+                    out[key] += getattr(ds, key)
+        return out
+
+    def register_runtime(self, runtime) -> None:
+        """Attach a live PrefetchRuntime (Session does this) so
+        ``reset_runtime_state`` can drain outstanding prefetch work."""
+        self._runtimes.add(runtime)
+
+    def unregister_runtime(self, runtime) -> None:
+        self._runtimes.discard(runtime)
 
     def protected_evictions(self) -> int:
         """Evictions where the policy passed over protected prefetched
@@ -433,11 +679,28 @@ class ObjectStore:
         policies = {id(ds.policy): ds.policy for ds in self.services}
         return sum(p.protected_evictions for p in policies.values())
 
-    def reset_runtime_state(self) -> None:
+    def reset_runtime_state(self, drain_timeout: float = 5.0) -> None:
         """Drop all caches and counters (between benchmark repetitions).
-        ``drop_cache`` flushes dirty write-back state first; the per-service
-        counters (``evictions`` et al.) are then zeroed too — they used to
+        Any Session-attached PrefetchRuntime is drained first — straggler
+        prefetch tasks from repetition *k* used to keep loading into the
+        freshly reset caches and pollute repetition *k+1*'s metrics; a
+        drain timeout is now surfaced as a warning and the runtime is
+        hard-drained (queued work cancelled) rather than ignored.
+        ``drop_cache`` then flushes dirty write-back state; the per-service
+        counters (``evictions`` et al.) are zeroed too — they used to
         survive resets and accumulate across repetitions."""
+        for runtime in list(self._runtimes):
+            if not runtime.drain(drain_timeout):
+                import warnings
+
+                warnings.warn(
+                    "prefetch work still outstanding at reset_runtime_state "
+                    f"after {drain_timeout}s; hard-draining so stragglers "
+                    "cannot pollute the next repetition",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                runtime.hard_drain(drain_timeout)
         for ds in self.services:
             ds.drop_cache()
             ds.reset_counters()

@@ -54,6 +54,12 @@ class Overhead:
     evicted_before_use: int = 0  # prefetched loads evicted before any access
     hidden_seconds: float = 0.0  # disk seconds removed from the app critical path
     protected_evictions: int = 0  # evictions where the policy spared a pending prefetch
+    # dispatch accounting (filled by the replay engine; the live store keeps
+    # the same pair per Data Service): how many executor submissions the
+    # prediction stream cost, and how many requested oids were suppressed
+    # before submission because they were already cached / in flight
+    batch_dispatches: int = 0
+    dedup_suppressed: int = 0
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -155,12 +161,22 @@ class Predictor:
 
     # -- shared helpers ----------------------------------------------------
 
+    def _dispatch_mode(self) -> str:
+        """The bound session's dispatch granularity ("batch" unless the
+        session opted into the legacy per-oid fan-out)."""
+        cfg = self.session.config if self.session is not None else None
+        return getattr(cfg, "dispatch", "batch")
+
     def _emit(self, oids: Iterable[int]) -> list[int]:
-        """Account predictions; when bound, fan their loads out on the
-        session's background runtime."""
+        """Account predictions; when bound, dispatch their loads on the
+        session's background runtime — batched per Data Service by default,
+        or one pool task per oid in "per-oid" mode."""
         out = [o for o in oids]
         self.overhead.predictions += len(out)
         if out and self.session is not None:
             store = self.session.store
-            self.session.runtime.fan_out(store.prefetch_access, out)
+            if self._dispatch_mode() == "batch":
+                store.prefetch_batch(out, runtime=self.session.runtime)
+            else:
+                self.session.runtime.fan_out(store.prefetch_access, out)
         return out

@@ -174,8 +174,137 @@ def _pga_populate(store, populate_pga) -> int:
     return g
 
 
+# -- trace memoization -------------------------------------------------------
+#
+# Recording a workload means interpreting its full traversal — by far the
+# slowest part of an evaluate run, and it was re-executed on every
+# invocation (and every test session) even though recording is fully
+# deterministic.  Traces are now memoized to disk: the cache entry stores
+# the recorded event streams AND the post-recording store contents (field
+# values matter — mutating workloads leave the store in the warm state the
+# replay's hint expansion reads), guarded by a fingerprint of the freshly
+# populated store so any change to an app or its populate sizes invalidates
+# the entry.  ``--no-trace-cache`` (or CAPRE_TRACE_CACHE=0) bypasses it.
+
+TRACE_CACHE_VERSION = 1
+DEFAULT_TRACE_CACHE_DIR = os.path.join("artifacts", "predict", "traces")
+
+
+def _resolve_trace_cache(trace_cache: Optional[str]) -> Optional[str]:
+    """``None``/empty disables caching; the sentinel ``"default"`` resolves
+    the ``CAPRE_TRACE_CACHE`` env override (``0``/empty disables, any other
+    value is the cache directory) and falls back to the artifacts dir."""
+    if trace_cache != "default":
+        return trace_cache or None
+    env = os.environ.get("CAPRE_TRACE_CACHE")
+    if env is not None:
+        return None if env in ("", "0") else env
+    return DEFAULT_TRACE_CACHE_DIR
+
+
+def _trace_cache_path(cache_dir: str, wl: Workload, runs: int, n_services: int) -> str:
+    name = (f"{wl.key}_r{runs}_ds{n_services}"
+            f"_v{TRACE_SCHEMA_VERSION}.{TRACE_CACHE_VERSION}.json")
+    return os.path.join(cache_dir, name)
+
+
+def _store_fingerprint(store, root: int, reg=None) -> dict:
+    """Identity of the freshly populated store — shape counts plus a
+    content hash of every object's class and field values, and (when the
+    registration is available) of the analysis hints, whose per-method
+    navigation structure changes whenever a traversal method's shape
+    does.  Any mismatch invalidates the cache entry and re-records.
+    Residual blind spot: an edit confined to ``Compute`` bodies that
+    flips control flow without touching schema, hints, or populate
+    output — use ``--no-trace-cache`` when iterating on those."""
+    import hashlib
+
+    h = hashlib.sha1()
+    n_objects = 0
+    for ds in store.services:
+        for oid in sorted(ds.disk):
+            rec = ds.disk[oid]
+            n_objects += 1
+            h.update(repr((ds.ds_id, oid, rec.cls, sorted(rec.fields.items()))).encode())
+    if reg is not None:
+        h.update(repr(sorted(
+            (key, tuple(hint.steps for hint in hints))
+            for key, hints in reg.report.hints.items()
+        )).encode())
+    return {
+        "root": root,
+        "n_objects": n_objects,
+        "n_services": len(store.services),
+        "content_sha1": h.hexdigest(),
+    }
+
+
+def _snapshot_store(store) -> list:
+    """JSON-serializable dump of every Data Service's disk (oid, class,
+    fields) — field values included, so the warm post-recording state of a
+    mutating workload round-trips."""
+    return [
+        [[rec.oid, rec.cls, rec.fields] for _oid, rec in sorted(ds.disk.items())]
+        for ds in store.services
+    ]
+
+
+def _apply_store_snapshot(store, snapshot: list) -> None:
+    import itertools
+
+    from repro.pos.store import PersistentObject
+
+    store._placement.clear()
+    max_oid = 0
+    for ds, objs in zip(store.services, snapshot):
+        ds.disk.clear()
+        for oid, cls, fields in objs:
+            ds.disk[oid] = PersistentObject(oid=oid, cls=cls, fields=fields)
+            store._placement[oid] = ds.ds_id
+            max_oid = max(max_oid, oid)
+    store._oid_counter = itertools.count(max_oid + 1)
+
+
+def _load_cached_traces(path: str, wl: Workload, fingerprint: dict) -> Optional[tuple]:
+    import json
+
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if blob.get("fingerprint") != fingerprint:
+        return None  # app/populate changed since this entry was written
+    traces = [
+        RecordedTrace(
+            app_name=wl.name,
+            workload=wl.workload,
+            events=as_events([tuple(ev) for ev in run]),
+            accesses=trace_oids([tuple(ev) for ev in run]),
+        )
+        for run in blob["traces"]
+    ]
+    return blob["store"], traces
+
+
+def _save_cached_traces(path: str, fingerprint: dict, store,
+                        traces: list[RecordedTrace]) -> None:
+    import json
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = {
+        "fingerprint": fingerprint,
+        "store": _snapshot_store(store),
+        "traces": [[ev.to_tuple() for ev in t.events] for t in traces],
+    }
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(blob, f)
+    os.replace(tmp, path)  # atomic: concurrent recorders cannot torn-write
+
+
 def record_workload(
-    wl: Workload, runs: int = 2, n_services: int = 4
+    wl: Workload, runs: int = 2, n_services: int = 4, cache_dir: Optional[str] = None
 ) -> tuple[POSClient, int, list[RecordedTrace]]:
     """Populate a zero-latency store and record ``runs`` cold-cache traces
     of the workload with prefetching off.  ``ObjectStore.trace`` captures
@@ -184,11 +313,24 @@ def record_workload(
     client (replay needs the object graph and the registration analysis)
     plus the traces.  For mutating workloads the train run's updates are
     visible to the eval run — exactly the warm-store regime a monitoring
-    predictor trains in."""
+    predictor trains in.  With ``cache_dir`` the recorded traces (and the
+    post-recording store state) are memoized to disk, keyed by workload,
+    run count, service count and trace schema version; on a hit the
+    traversals are not re-executed."""
     client = POSClient(n_services=n_services)
-    client.register(wl.build_app())
+    reg = client.register(wl.build_app())
     root = wl.populate(client.store)
-    traces: list[RecordedTrace] = []
+    path = fingerprint = None
+    if cache_dir:
+        path = _trace_cache_path(cache_dir, wl, runs, n_services)
+        fingerprint = _store_fingerprint(client.store, root, reg)
+        if os.path.exists(path):
+            cached = _load_cached_traces(path, wl, fingerprint)
+            if cached is not None:
+                snapshot, traces = cached
+                _apply_store_snapshot(client.store, snapshot)
+                return client, root, traces
+    traces = []
     for _ in range(runs):
         client.store.reset_runtime_state()
         client.store.trace = []
@@ -207,22 +349,29 @@ def record_workload(
             )
         )
         client.store.trace = None
+    if path is not None:
+        _save_cached_traces(path, fingerprint, client.store, traces)
     return client, root, traces
 
 
 def record_catalog(
-    workloads: Sequence[Workload], runs: int = 2, max_workers: Optional[int] = None
+    workloads: Sequence[Workload], runs: int = 2, max_workers: Optional[int] = None,
+    cache_dir: Optional[str] = None,
 ) -> dict[str, tuple[POSClient, int, list[RecordedTrace]]]:
     """Record every workload concurrently, each on its own store, so the
     traces stay byte-identical to serial recording.  On the default
     zero-latency store the interpreter is CPU-bound and the GIL caps the
     overlap; the pool pays off when recording is given a sleeping latency
-    model (and costs nothing but threads otherwise).  Returns
+    model (and costs nothing but threads otherwise).  ``cache_dir`` is
+    passed through to ``record_workload`` (disk-memoized traces).  Returns
     ``{workload_key: (client, root, traces)}`` in the order requested."""
     if max_workers is None:
         max_workers = max(1, len(workloads))
     with ThreadPoolExecutor(max_workers=max_workers) as pool:
-        futures = {wl.key: pool.submit(record_workload, wl, runs) for wl in workloads}
+        futures = {
+            wl.key: pool.submit(record_workload, wl, runs, 4, cache_dir)
+            for wl in workloads
+        }
         return {key: fut.result() for key, fut in futures.items()}
 
 
@@ -260,13 +409,21 @@ class VirtualReplay:
     store's ``SharedBudget`` mode."""
 
     def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
-                 policy: str = DEFAULT_POLICY, shared_budget: bool = False):
+                 policy: str = DEFAULT_POLICY, shared_budget: bool = False,
+                 dispatch: str = "per-oid"):
         n = len(store.services)
         self.store = store
         self.latency = latency
         self.cache_capacity = cache_capacity
         self.policy_name = policy
         self.shared_budget = shared_budget and bool(cache_capacity)
+        # dispatch granularity mirrored from the live runtime: "per-oid"
+        # issues one executor submission per predicted oid (the i-th load
+        # starts ~i*dispatch_overhead late — submissions serialize on the
+        # dispatching thread); "batch" groups a prediction by Data Service,
+        # dedupes against cache + in-flight before submission, and pays one
+        # dispatch_overhead per service batch
+        self.dispatch = dispatch
         if self.shared_budget:
             # the store's own SharedBudget (owners are Data-Service indices
             # here; its lock is unused — replay is single-threaded)
@@ -297,6 +454,8 @@ class VirtualReplay:
         self.write_hits = 0  # writes that found the line resident
         self.dirty_evictions = 0
         self.flushed_writes = 0
+        self.batch_dispatches = 0  # executor submissions the predictions cost
+        self.dedup_suppressed = 0  # oids suppressed before submission (batch mode)
         self._evicted_ever: set[int] = set()
 
     # -- cache mechanics ----------------------------------------------------
@@ -357,11 +516,23 @@ class VirtualReplay:
     def predict(self, oids: Sequence[int]) -> None:
         """Predictor emitted ``oids`` at the current virtual time: schedule
         a disk load on each one's own Data Service unless already resident
-        or in flight (request coalescing)."""
-        for oid in oids:
+        or in flight (request coalescing).  Dispatch overhead charges at
+        the configured granularity — per oid, or per Data-Service batch —
+        by delaying the *issue* time of the loads (the submitting side
+        serializes task starts; the application clock itself is not
+        advanced, prefetch dispatch runs on background threads)."""
+        if self.dispatch == "batch":
+            self._predict_batched(oids)
+            return
+        overhead = self.latency.dispatch_overhead
+        for i, oid in enumerate(oids):
+            issue_t = self.t + (i + 1) * overhead
             ds_i = self.store.service_of(oid).ds_id
+            # promote completions up to the app clock only — a load issued
+            # earlier in this very emission is *in flight*, not resident
             self._materialize(ds_i, self.t)
             self.prefetch_requests += 1
+            self.batch_dispatches += 1  # per-oid: every oid is a submission
             cache = self.caches[ds_i]
             if oid in cache:
                 # policy bump only (a prefetch touch must not count as the
@@ -370,8 +541,43 @@ class VirtualReplay:
                 continue
             if oid in self.inflight[ds_i]:
                 continue
-            self.inflight[ds_i][oid] = self.disks[ds_i].schedule(self.t)
+            self.inflight[ds_i][oid] = self.disks[ds_i].schedule(issue_t)
             self.prefetch_loads += 1
+
+    def _predict_batched(self, oids: Sequence[int]) -> None:
+        """The batched mirror of ``ObjectStore.prefetch_batch``: group by
+        owning Data Service in predicted-need order, dedupe each group
+        against residency and in-flight loads before submission, then issue
+        the surviving loads as one pipelined batch on the service's disk."""
+        groups: dict[int, list[int]] = {}
+        for oid in oids:
+            groups.setdefault(self.store.service_of(oid).ds_id, []).append(oid)
+        overhead = self.latency.dispatch_overhead
+        submitted = 0
+        for ds_i, batch in groups.items():
+            self._materialize(ds_i, self.t)
+            todo: list[int] = []
+            claimed: set[int] = set()
+            cache = self.caches[ds_i]
+            for oid in batch:
+                self.prefetch_requests += 1
+                if oid in cache:
+                    self.policies[ds_i].note_access(oid, prefetch=True)
+                    self.dedup_suppressed += 1
+                elif oid in self.inflight[ds_i] or oid in claimed:
+                    self.dedup_suppressed += 1
+                else:
+                    claimed.add(oid)
+                    todo.append(oid)
+            if not todo:
+                continue
+            submitted += 1
+            self.batch_dispatches += 1
+            issue_t = self.t + submitted * overhead
+            spans = self.disks[ds_i].schedule_batch(issue_t, len(todo))
+            for oid, span in zip(todo, spans):
+                self.inflight[ds_i][oid] = span
+                self.prefetch_loads += 1
 
     def access(self, oid: int, write: bool = False) -> None:
         """Application touches ``oid`` (read navigation, or field update
@@ -439,6 +645,7 @@ class ReplayResult:
     cache_capacity: int
     policy: str
     shared_budget: bool
+    dispatch: str
     precision: Optional[float]
     recall: Optional[float]
     evaluated: bool
@@ -458,6 +665,8 @@ class ReplayResult:
     write_hits: int
     dirty_evictions: int
     flushed_writes: int
+    batch_dispatches: int
+    dedup_suppressed: int
     overhead: dict = field(default_factory=dict)
 
     def row(self) -> dict:
@@ -493,13 +702,14 @@ def replay(
     cache_capacity: int = 0,
     policy: str = DEFAULT_POLICY,
     shared_budget: bool = False,
+    dispatch: str = "per-oid",
     baseline_stall_seconds: Optional[float] = None,
 ) -> ReplayResult:
     """Drive ``predictor`` through the recorded event stream on the virtual
     clock and score what its prefetches would have hidden."""
     predictor.attach(store, reg)
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
-                           policy=policy, shared_budget=shared_budget)
+                           policy=policy, shared_budget=shared_budget, dispatch=dispatch)
     predicted: set[int] = set()
     accessed: set[int] = set()
     n_access, covered = 0, 0
@@ -540,12 +750,15 @@ def replay(
     overhead["evicted_before_use"] = engine.evicted_before_use
     overhead["hidden_seconds"] = engine.hidden_seconds
     overhead["protected_evictions"] = engine.protected_evictions
+    overhead["batch_dispatches"] = engine.batch_dispatches
+    overhead["dedup_suppressed"] = engine.dedup_suppressed
     return ReplayResult(
         app=trace.app_name,
         workload=trace.workload,
         predictor=predictor.name,
         cache_capacity=cache_capacity,
         policy=policy,
+        dispatch=dispatch,
         # the engine's effective mode, not the requested flag: at capacity 0
         # there is no budget to share and the row must say so
         shared_budget=engine.shared_budget,
@@ -568,6 +781,8 @@ def replay(
         write_hits=engine.write_hits,
         dirty_evictions=engine.dirty_evictions,
         flushed_writes=engine.flushed_writes,
+        batch_dispatches=engine.batch_dispatches,
+        dedup_suppressed=engine.dedup_suppressed,
         overhead=overhead,
     )
 
@@ -580,14 +795,15 @@ def evaluate_workload(
     cache_capacities: Sequence[int] = (0,),
     policies: Sequence[str] = (DEFAULT_POLICY,),
     shared_budget: bool = False,
+    dispatch_modes: Sequence[str] = ("per-oid",),
     latency: LatencyModel = REPLAY,
     recorded: Optional[tuple[POSClient, int, list[RecordedTrace]]] = None,
 ) -> list[ReplayResult]:
     """Record (train + eval runs), then replay every requested predictor
-    under every (cache capacity, eviction policy) — miners warmed on the
-    train run, everyone scored on the eval run.  ``rop_depth`` is only
-    consulted when no ``config`` is supplied; pass ``recorded`` to reuse
-    traces from ``record_catalog``."""
+    under every (cache capacity, eviction policy, dispatch mode) — miners
+    warmed on the train run, everyone scored on the eval run.
+    ``rop_depth`` is only consulted when no ``config`` is supplied; pass
+    ``recorded`` to reuse traces from ``record_catalog``."""
     client, _root, traces = recorded if recorded is not None else record_workload(wl, runs=2)
     train, eval_ = traces[0], traces[-1]
     reg = client.logic_module.registered[wl.name]
@@ -595,26 +811,30 @@ def evaluate_workload(
     results = []
     for capacity in cache_capacities:
         for policy in policies:
+            # the no-prefetch reference never dispatches: one baseline
+            # serves every dispatch mode of this (capacity, policy) cell
             baseline = replay_baseline(
                 eval_, client.store, latency=latency, cache_capacity=capacity,
                 policy=policy, shared_budget=shared_budget,
             ).stall_seconds
-            for mode in modes if modes is not None else available(kind="pos"):
-                predictor = make_pos_predictor(mode, config=cfg)
-                predictor.warm(train.accesses)
-                results.append(
-                    replay(
-                        eval_,
-                        predictor,
-                        client.store,
-                        reg,
-                        latency=latency,
-                        cache_capacity=capacity,
-                        policy=policy,
-                        shared_budget=shared_budget,
-                        baseline_stall_seconds=baseline,
+            for dispatch in dispatch_modes:
+                for mode in modes if modes is not None else available(kind="pos"):
+                    predictor = make_pos_predictor(mode, config=cfg)
+                    predictor.warm(train.accesses)
+                    results.append(
+                        replay(
+                            eval_,
+                            predictor,
+                            client.store,
+                            reg,
+                            latency=latency,
+                            cache_capacity=capacity,
+                            policy=policy,
+                            shared_budget=shared_budget,
+                            dispatch=dispatch,
+                            baseline_stall_seconds=baseline,
+                        )
                     )
-                )
     return results
 
 
@@ -625,13 +845,16 @@ def evaluate_apps(
     cache_capacities: Sequence[int] = (0,),
     policies: Sequence[str] = (DEFAULT_POLICY,),
     shared_budget: bool = False,
+    dispatch_modes: Sequence[str] = ("per-oid",),
     latency: LatencyModel = REPLAY,
+    trace_cache: Optional[str] = "default",
 ) -> list[ReplayResult]:
     catalog = _catalog()
     for name in apps:
         if name not in catalog:
             raise KeyError(f"unknown app {name!r}; catalog: {sorted(catalog)}")
-    recorded = record_catalog([catalog[name] for name in apps])
+    recorded = record_catalog([catalog[name] for name in apps],
+                              cache_dir=_resolve_trace_cache(trace_cache))
     out: list[ReplayResult] = []
     for name in apps:
         out.extend(
@@ -642,6 +865,7 @@ def evaluate_apps(
                 cache_capacities=cache_capacities,
                 policies=policies,
                 shared_budget=shared_budget,
+                dispatch_modes=dispatch_modes,
                 latency=latency,
                 recorded=recorded[name],
             )
@@ -660,6 +884,7 @@ _COLUMNS = (
     ("predictor", "{}"),
     ("cache_capacity", "{}"),
     ("policy", "{}"),
+    ("dispatch", "{}"),
     ("precision", "{:.3f}"),
     ("recall", "{:.3f}"),
     ("coverage", "{:.3f}"),
@@ -692,6 +917,8 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     "dirty_evictions",
     "protected_evictions",
     "shared_budget",
+    "batch_dispatches",
+    "dedup_suppressed",
 )
 
 
@@ -743,6 +970,13 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="treat --cache-capacity as one global line budget drawn "
                          "on by all Data Services (policy-mediated stealing) "
                          "instead of a per-service capacity")
+    ap.add_argument("--dispatch", default="per-oid,batch",
+                    help="comma-separated dispatch modes to sweep (per-oid = one "
+                         "executor submission per predicted oid; batch = one "
+                         "deduped request per Data Service)")
+    ap.add_argument("--no-trace-cache", action="store_true",
+                    help="always re-record workload traces instead of reusing "
+                         "the disk-memoized ones under artifacts/predict/traces")
     ap.add_argument("--out", default="artifacts/predict",
                     help="directory for the CSV artifact (replay.csv)")
     ap.add_argument("--no-csv", action="store_true", help="print tables only")
@@ -755,9 +989,12 @@ def main(argv: Optional[list[str]] = None) -> None:
     modes = tuple(m for m in args.modes.split(",") if m) if args.modes else None
     capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
     policies = tuple(p for p in args.cache_policy.split(",") if p)
+    dispatch_modes = tuple(d for d in args.dispatch.split(",") if d)
     results = evaluate_apps(
         apps=apps, modes=modes, rop_depth=args.rop_depth, cache_capacities=capacities,
         policies=policies, shared_budget=args.shared_budget,
+        dispatch_modes=dispatch_modes,
+        trace_cache=None if args.no_trace_cache else "default",
     )
     print(format_table(results))
     if not args.no_csv:

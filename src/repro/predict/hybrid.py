@@ -81,6 +81,9 @@ class Hybrid(Predictor):
             late_predictions=s.late_predictions + m.late_predictions,
             evicted_before_use=s.evicted_before_use + m.evicted_before_use,
             hidden_seconds=s.hidden_seconds + m.hidden_seconds,
+            protected_evictions=s.protected_evictions + m.protected_evictions,
+            batch_dispatches=s.batch_dispatches + m.batch_dispatches,
+            dedup_suppressed=s.dedup_suppressed + m.dedup_suppressed,
         )
 
     @overhead.setter

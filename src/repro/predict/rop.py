@@ -69,12 +69,23 @@ class Rop(Predictor):
         self.overhead.monitor_events += 1
         if self.session is not None:
             store = self.session.store
+            runtime = self.session.runtime
+            if self._dispatch_mode() == "batch":
+                # collect the frontier via peek (schema walk, no I/O), then
+                # one deduped, need-ordered request per Data Service
+                def bfs_batch(root_oid: int) -> None:
+                    out = self._frontier(root_oid, lambda _ref: None)
+                    self.overhead.predictions += len(out)
+                    store.prefetch_batch(out, runtime=runtime)
+
+                runtime.fan_out(bfs_batch, [oid])
+                return []
 
             def bfs(root_oid: int) -> None:
                 fetched = self._frontier(root_oid, store.prefetch_access)
                 self.overhead.predictions += len(fetched)
 
-            self.session.runtime.fan_out(bfs, [oid])
+            runtime.fan_out(bfs, [oid])
             return []
         out = self._frontier(oid, lambda _ref: None)
         self.overhead.predictions += len(out)

@@ -39,8 +39,9 @@ class CapreStream(StreamPolicy):
         groups = streamer._groups
         hi = min(group_index + 1 + streamer.k_ahead, len(groups))
         for gi in range(group_index + 1, hi):
-            for rec in groups[gi]:
-                streamer._fetch_async(rec.path)
+            # one batched dispatch per plan group (deduped against cache +
+            # in-flight in one snapshot) instead of one pool task per record
+            streamer.fetch_group([rec.path for rec in groups[gi]])
 
 
 class RopStream(StreamPolicy):
@@ -50,9 +51,9 @@ class RopStream(StreamPolicy):
         for gi in range(group_index + 1, hi):
             # ROP cannot prefetch collections (section 2): skip stacked
             # layer groups entirely
-            for rec in groups[gi]:
-                if not rec.collection:
-                    streamer._fetch_async(rec.path)
+            streamer.fetch_group(
+                [rec.path for rec in groups[gi] if not rec.collection]
+            )
 
 
 class MarkovStream(StreamPolicy):
@@ -80,8 +81,7 @@ class MarkovStream(StreamPolicy):
             nxt = counts.most_common(1)[0][0]
             if not (0 <= nxt < len(groups)) or nxt == cur:
                 break
-            for rec in groups[nxt]:
-                streamer._fetch_async(rec.path)
+            streamer.fetch_group([rec.path for rec in groups[nxt]])
             fetched += 1
             cur = nxt
 
@@ -92,8 +92,8 @@ class HybridStream(MarkovStream):
         groups = streamer._groups
         hi = min(group_index + 1 + streamer.k_ahead, len(groups))
         for gi in range(group_index + 1, hi):
-            for rec in groups[gi]:
-                if rec.collection:
-                    streamer._fetch_async(rec.path)
+            streamer.fetch_group(
+                [rec.path for rec in groups[gi] if rec.collection]
+            )
         # learned part: mined transitions cover the non-collection groups
         super().on_group_start(streamer, group_index)

@@ -39,6 +39,8 @@ class StreamMetrics:
     stall_seconds: float = 0.0
     bytes_moved: int = 0
     wasted_bytes: int = 0  # prefetched but never used
+    batch_dispatches: int = 0  # pool submissions made by batched group fetches
+    dedup_suppressed: int = 0  # paths suppressed pre-submission (cached/in-flight)
 
 
 class HostParamStore:
@@ -97,6 +99,7 @@ class WeightStreamer:
         self._inflight: dict[str, threading.Event] = {}
         self._used: set[str] = set()  # paths actually served to compute
         self._lock = threading.Lock()
+        self._workers = max(1, workers)
         self._pool = ThreadPoolExecutor(max_workers=workers, thread_name_prefix="stream")
         self._groups = self._group_order()
         self._done = False
@@ -144,6 +147,51 @@ class WeightStreamer:
             ev.set()
 
         self._pool.submit(work)
+
+    def fetch_group(self, paths) -> None:
+        """Batched prefetch of one plan group: dedupe every path against
+        cache and in-flight fetches under ONE lock snapshot (the per-record
+        fan-out paid a lock round trip and a pool submission per path), then
+        pipeline the survivors through at most ``workers`` lanes — strided,
+        so the earliest-needed records start first on every lane.  This is
+        the streaming analogue of ``ObjectStore.prefetch_batch``."""
+        todo: list[str] = []
+        with self._lock:
+            for path in paths:
+                if path in self._cache or path in self._inflight or path in todo:
+                    self.metrics.dedup_suppressed += 1
+                    continue
+                self._inflight[path] = threading.Event()
+                todo.append(path)
+        if not todo:
+            return
+        lanes = max(1, min(self._workers, len(todo)))
+        with self._lock:
+            self.metrics.batch_dispatches += lanes
+        for i in range(lanes):
+            self._pool.submit(self._fetch_lane, todo[i::lanes])
+
+    def _fetch_lane(self, paths: list[str]) -> None:
+        for i, path in enumerate(paths):
+            try:
+                arr = self.store.fetch(path)
+            except BaseException:
+                # release EVERY remaining claim, not just the failing one —
+                # a stranded in-flight entry would pin each later path's
+                # get() on a dead event (they fall back to _fetch_async)
+                with self._lock:
+                    evs = [self._inflight.pop(p, None) for p in paths[i:]]
+                for ev in evs:
+                    if ev is not None:
+                        ev.set()
+                raise
+            with self._lock:
+                self._cache[path] = arr
+                self.metrics.fetches += 1
+                self.metrics.bytes_moved += arr.nbytes
+                ev = self._inflight.pop(path, None)
+            if ev is not None:
+                ev.set()
 
     def get(self, path: str) -> np.ndarray:
         """Blocking access from the compute thread."""

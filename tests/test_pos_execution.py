@@ -102,8 +102,9 @@ def test_capre_wall_clock_beats_no_prefetch():
 
 def test_metrics_accounting(client):
     _run(client, mode=None, n_tx=20)
-    m = client.store.metrics
-    assert m.app_loads > 0
-    assert m.app_cache_misses > 0
-    assert m.prefetch_loads == 0  # no prefetching configured
-    assert m.writes > 0  # the setCustomer updates
+    m = client.store.snapshot_metrics()
+    assert m["app_loads"] > 0
+    assert m["app_cache_misses"] > 0
+    assert m["prefetch_loads"] == 0  # no prefetching configured
+    assert m["batch_dispatches"] == 0
+    assert m["writes"] > 0  # the setCustomer updates

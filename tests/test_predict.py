@@ -65,7 +65,7 @@ def test_all_registered_modes_run_live(client):
         with client.session("bank", mode=mode, warm_trace=warm) as s:
             s.execute(root, "auditAll")
             assert s.drain(10.0)
-        assert client.store.metrics.prefetch_requests > 0, mode
+        assert client.store.snapshot_metrics()["prefetch_requests"] > 0, mode
 
 
 # ---------------------------------------------------------------------------
