@@ -24,6 +24,7 @@ import statistics
 import time
 import warnings
 
+from repro.obs import Observability
 from repro.pos.client import POSClient
 from repro.predict.evaluate import _catalog
 
@@ -91,6 +92,12 @@ def _run_policy(results, wl, app_name, capacity, policy, shared_budget,
                 n_services=n_services, latency=latency, cache_capacity=capacity,
                 cache_policy=policy, shared_budget=shared_budget,
             )
+            # registry-only observability (no span tracing: the bench is the
+            # "tracing disabled" regime the acceptance check holds to PR 5's
+            # means) — per-service demand-stall histograms pool across reps,
+            # and the meter reports what the instrumentation itself cost
+            obs = Observability(tracing=False)
+            client.store.attach_obs(obs)
             client.register(wl.build_app())
             root = wl.populate(client.store)
             # monitoring run: record the event trace the miners train
@@ -103,12 +110,15 @@ def _run_policy(results, wl, app_name, capacity, policy, shared_budget,
                     wl.run_once(s, root)
                 warm_trace = list(client.store.trace)
                 client.store.trace = None
-            cells[dispatch] = (client, root, warm_trace)
+            # drop whatever populate/monitoring charged — the histograms
+            # should pool exactly the timed repetitions below
+            obs.registry.reset()
+            cells[dispatch] = (client, root, warm_trace, obs)
         times = {d: [] for d in sweeps}
         metrics_by = {d: {} for d in sweeps}
         for _ in range(reps):
             for dispatch in sweeps:
-                client, root, warm_trace = cells[dispatch]
+                client, root, warm_trace, _obs = cells[dispatch]
                 client.store.reset_runtime_state()
                 with client.session(
                     wl.name,
@@ -145,6 +155,15 @@ def _run_policy(results, wl, app_name, capacity, policy, shared_budget,
                     metrics_by[dispatch] = metrics
         for dispatch in sweeps:
             metrics = metrics_by[dispatch]
+            obs = cells[dispatch][3]
+            # per-operation stall tail over all reps (bucketed estimate:
+            # this is the wall-clock regime) + what observing it cost
+            p50, p99, p999 = obs.registry.percentiles("demand_stall_s")
+            metrics["stall_p50_s"] = "" if p50 is None else f"{p50:.6f}"
+            metrics["stall_p99_s"] = "" if p99 is None else f"{p99:.6f}"
+            metrics["stall_p999_s"] = "" if p999 is None else f"{p999:.6f}"
+            metrics["obs_seconds"] = f"{obs.registry.meter.seconds:.6f}"
+            metrics["obs_events"] = obs.registry.meter.events
             metrics["policy"] = policy
             metrics["dispatch"] = dispatch if mode is not None else ""
             metrics["workload"] = wl.workload

@@ -1,6 +1,13 @@
 """Weight-streaming benchmark — the TPU-side analogue of the paper's
 evaluation: plan-driven (CAPre) vs depth-limited (ROP) vs on-demand
-host->device parameter streaming for a layer-by-layer decode."""
+host->device parameter streaming for a layer-by-layer decode.
+
+Prefetching modes run the same ``--dispatch per-oid,batch`` A/B the object
+store benches sweep (one pool task per path vs strided lanes per plan
+group), and every cell records its :class:`StreamMetrics` plus a
+``stream_stall_s`` histogram through a shared ``repro.obs.Registry`` —
+the p99 per-``get`` wait rides along in the derived column.
+"""
 
 from __future__ import annotations
 
@@ -10,7 +17,10 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.core.access_plan import build_access_plan
 from repro.models.model import Model
+from repro.obs import Registry
 from repro.runtime.prefetch import HostParamStore, WeightStreamer
+
+DISPATCH_MODES = ("batch", "per-oid")
 
 
 def run(reps: int = 3) -> list[str]:
@@ -26,16 +36,34 @@ def run(reps: int = 3) -> list[str]:
     lines = []
     base = None
     for mode in (None, "rop", "capre"):
-        walls, stalls, hits = [], 0, 0
-        for _ in range(reps):
-            store = HostParamStore(params, bandwidth_gbps=1.0, base_latency_s=400e-6)
-            ws = WeightStreamer(store, plan=plan, mode=mode, k_ahead=3, workers=8)
-            walls.append(ws.run_plan(compute_s_per_group=1.5e-3))
-            stalls, hits = ws.metrics.stalls, ws.metrics.prefetch_hits
-            ws.close()
-        mean = sum(walls) / len(walls)
-        if mode is None:
-            base = mean
-        improvement = f"improvement={100 * (1 - mean / base):.1f}%,stalls={stalls},hits={hits}"
-        lines.append(f"streaming/{mode or 'none'},{mean * 1e6:.0f},{improvement}")
+        # the on-demand reference never prefetches, so it has no dispatch
+        # layer to A/B; prefetching modes sweep both arms
+        for dispatch in DISPATCH_MODES[:1] if mode is None else DISPATCH_MODES:
+            registry = Registry()
+            walls = []
+            stalls = hits = batches = dedup = 0
+            for _ in range(reps):
+                store = HostParamStore(params, bandwidth_gbps=1.0, base_latency_s=400e-6)
+                ws = WeightStreamer(store, plan=plan, mode=mode, k_ahead=3, workers=8,
+                                    dispatch=dispatch, registry=registry)
+                walls.append(ws.run_plan(compute_s_per_group=1.5e-3))
+                stalls, hits = ws.metrics.stalls, ws.metrics.prefetch_hits
+                batches, dedup = ws.metrics.batch_dispatches, ws.metrics.dedup_suppressed
+                ws.close()
+            mean = sum(walls) / len(walls)
+            if base is None:
+                base = mean
+            p99 = registry.percentiles("stream_stall_s")[1]
+            derived = (f"improvement={100 * (1 - mean / base):.1f}%,stalls={stalls},"
+                       f"hits={hits},batches={batches},dedup={dedup},"
+                       f"p99_stall_us={0.0 if p99 is None else p99 * 1e6:.0f}")
+            name = mode or "none"
+            if mode is not None and dispatch != "batch":
+                name = f"{name}_{dispatch}"
+            lines.append(f"streaming/{name},{mean * 1e6:.0f},{derived}")
     return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

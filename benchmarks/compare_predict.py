@@ -28,7 +28,13 @@ the scoring loop), so equality-modulo-tolerance is a meaningful check:
     pre-batching file reads as all-``per-oid``), and the fresh header must
     carry the dispatch columns (``dispatch``, ``batch_dispatches``,
     ``dedup_suppressed``) — both dispatch modes are gated so neither the
-    batched path nor the per-oid reference can silently regress.
+    batched path nor the per-oid reference can silently regress;
+  * the per-operation stall-percentile columns (``stall_p50_s``,
+    ``stall_p99_s``, ``stall_p999_s``, plus the calibrated-seconds pair)
+    must be present, and per row the fresh ``stall_p99_s`` may not exceed
+    the baseline tail by more than ``--p99-tolerance`` relative headroom
+    (absolute floor ``P99_ABS_FLOOR_S``) — mean stall can stay flat while
+    the tail quietly doubles; this gate catches that.
 
 ``--update-baseline`` regenerates the committed baseline in place from the
 fresh file — required in the same PR as any intentional column or metric
@@ -62,6 +68,20 @@ POLICY_COLUMNS = ("policy", "protected_evictions")
 #: batched dispatch layer existed (per-oid only) and must fail the gate
 DISPATCH_COLUMNS = ("dispatch", "batch_dispatches", "dedup_suppressed")
 
+#: the per-operation stall-percentile columns (exact over the virtual
+#: clock's demand events) plus the calibrated-seconds report — a replay.csv
+#: missing them was produced by a pre-observability harness and must fail
+#: the gate; ``stall_p99_s`` is additionally gated against regression
+PCTL_COLUMNS = ("stall_p50_s", "stall_p99_s", "stall_p999_s",
+                "calib_scale", "calibrated_stall_s")
+
+#: p99 stall gating: fail when the fresh tail exceeds the baseline by more
+#: than ``rel`` (fractional) with an absolute floor of ``abs`` seconds —
+#: the floor keeps sub-millisecond tails from tripping on exact-arithmetic
+#: jitter introduced by intentional think/overhead constant tweaks
+P99_REL_TOLERANCE = 0.10
+P99_ABS_FLOOR_S = 5e-4
+
 
 def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
     with open(path, newline="") as f:
@@ -78,7 +98,8 @@ def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
     )
 
 
-def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> list[str]:
+def compare(current_path: str, baseline_path: str, tolerance: float = 0.02,
+            p99_tolerance: float = P99_REL_TOLERANCE) -> list[str]:
     """Returns a list of human-readable regression messages (empty = pass)."""
     (current, cur_fields), (baseline, _) = _load(current_path), _load(baseline_path)
     failures: list[str] = []
@@ -98,6 +119,12 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> l
     if missing_cols:
         failures.append(
             f"{current_path}: dispatch columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
+    missing_cols = [c for c in PCTL_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: stall-percentile columns missing from header: "
             f"{', '.join(missing_cols)}"
         )
     for key in sorted(baseline):
@@ -125,6 +152,18 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02) -> l
         # row that charged writes cannot silently go write-blind
         if baseline[key].get("writes") and not cur.get("writes"):
             failures.append(f"{label}: writes cell is empty in {current_path}")
+        # tail-latency gate: the p99 per-operation stall must not grow past
+        # the baseline tail by more than p99_tolerance (relative), with an
+        # absolute floor so near-zero tails don't trip on harmless jitter
+        base_p99, cur_p99 = baseline[key].get("stall_p99_s"), cur.get("stall_p99_s")
+        if base_p99 and cur_p99:
+            base_f, cur_f = float(base_p99), float(cur_p99)
+            allowed = max(base_f * (1.0 + p99_tolerance), base_f + P99_ABS_FLOOR_S)
+            if cur_f > allowed:
+                failures.append(
+                    f"{label}: stall_p99_s {cur_f:.6f} > baseline {base_f:.6f} "
+                    f"(+{p99_tolerance:.0%} rel / +{P99_ABS_FLOOR_S}s abs)"
+                )
     return failures
 
 
@@ -135,6 +174,10 @@ def main(argv=None) -> int:
     ap.add_argument("current", help="freshly generated replay.csv")
     ap.add_argument("baseline", help="committed baseline.csv")
     ap.add_argument("--tolerance", type=float, default=0.02)
+    ap.add_argument("--p99-tolerance", type=float, default=P99_REL_TOLERANCE,
+                    help="relative headroom allowed on stall_p99_s before the "
+                         "tail-latency gate fails (absolute floor "
+                         f"{P99_ABS_FLOOR_S}s always applies)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="regenerate the committed baseline in place from the "
                          "fresh file instead of comparing (use in the PR that "
@@ -161,7 +204,8 @@ def main(argv=None) -> int:
         shutil.copyfile(args.current, args.baseline)
         print(f"baseline regenerated: {args.baseline} <- {args.current} ({len(cur)} rows)")
         return 0
-    failures = compare(args.current, args.baseline, tolerance=args.tolerance)
+    failures = compare(args.current, args.baseline, tolerance=args.tolerance,
+                       p99_tolerance=args.p99_tolerance)
     if failures:
         print("PREDICTION TIMELINESS REGRESSION:")
         for msg in failures:

@@ -1,0 +1,171 @@
+"""Export prefetch-lifecycle timelines as Chrome-trace / Perfetto JSON —
+the observability acceptance harness (DESIGN.md section 3.7).
+
+Runs the same app on both clocks and exports both timelines:
+
+  * **wall** — a live ``ObjectStore`` run (sleeping latency model, span
+    tracing on) of the first requested app, exported to
+    ``<out>/<app>_wall.trace.json``;
+  * **virtual** — a deterministic ``VirtualReplay`` of every requested
+    app's recorded trace under static-capre, exported to
+    ``<out>/<app>_replay.trace.json``.
+
+Every export is validated in-process (span lifecycle invariants, Chrome
+trace schema, >= 4 lifecycle phases per loaded prefetch span) — a
+violation is a non-zero exit, which is what the CI job gates on.  The
+stall histograms of every run land in ``<out>/histograms.csv``.
+
+Open a trace at https://ui.perfetto.dev (or chrome://tracing): one process
+track per Data Service, one thread track per disk lane, counter tracks for
+disk-slot and demand-queue occupancy.
+
+Usage: PYTHONPATH=src python -m benchmarks.trace_timeline \
+    [--apps bank,oo7] [--out artifacts/obs]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+from typing import Optional
+
+from repro.obs import (
+    Observability,
+    Tracer,
+    check_span_invariants,
+    chrome_trace,
+    full_lifecycle_phase_counts,
+    write_chrome_trace,
+)
+from repro.pos.client import POSClient, SessionConfig
+from repro.predict import make_pos_predictor
+from repro.predict.calibration import load_calibration
+from repro.predict.evaluate import _catalog, record_workload, replay
+
+from .common import BENCH_LATENCY
+
+
+def _validate(name: str, spans, clock: str) -> list[str]:
+    """Lifecycle + export-schema + phase-coverage checks for one run.
+    Returns human-readable problems (empty = pass)."""
+    problems = [f"{name}: {p}" for p in check_span_invariants(spans)]
+    obj = chrome_trace(spans, clock=clock)
+    phases = full_lifecycle_phase_counts(obj)
+    loaded = [s for s in spans if s.kind == "prefetch" and s.load_done_t is not None]
+    for span in loaded:
+        if phases.get(span.oid, 0) < 4:
+            problems.append(
+                f"{name}: oid={span.oid} exported only "
+                f"{phases.get(span.oid, 0)} lifecycle phases (< 4)"
+            )
+    if not loaded:
+        problems.append(f"{name}: no loaded prefetch spans at all")
+    return problems
+
+
+def _hist_row(run: str, clock: str, metric: str, labels: dict, snap: dict) -> dict:
+    return {
+        "run": run, "clock": clock, "metric": metric,
+        "labels": ";".join(f"{k}={v}" for k, v in sorted(labels.items())),
+        "count": snap.get("count", ""), "sum_s": snap.get("sum", ""),
+        "min_s": snap.get("min", ""), "max_s": snap.get("max", ""),
+        "p50_s": snap.get("p50", ""), "p99_s": snap.get("p99", ""),
+        "p999_s": snap.get("p999", ""),
+    }
+
+
+def wall_run(app: str, out_dir: str, hist_rows: list) -> tuple[str, list[str]]:
+    """One live store run with full span tracing; returns (trace path,
+    validation problems)."""
+    wl = _catalog()[app]
+    client = POSClient(n_services=4, latency=BENCH_LATENCY)
+    obs = Observability(tracing=True)
+    client.store.attach_obs(obs)
+    client.register(wl.build_app())
+    root = wl.populate(client.store)
+    with client.session(wl.name, mode="capre", parallel_workers=16,
+                        session_label=f"{app}-wall") as s:
+        wl.run_once(s, root)
+        s.drain(30.0)
+    # whatever is still resident-but-never-demanded terminates now, so the
+    # invariant check below sees a complete lifecycle for every span
+    obs.tracer.drop_active("run-end")
+    spans = obs.tracer.spans()
+    problems = _validate(f"{app}/wall", spans, clock="wall")
+    path = os.path.join(out_dir, f"{app}_wall.trace.json")
+    if not problems:
+        write_chrome_trace(path, spans, clock="wall")
+    snap = obs.registry.snapshot()
+    for hists in snap["histograms"].values():
+        for h in hists:
+            hist_rows.append(_hist_row(f"{app}/wall", "wall", "demand_stall_s",
+                                       h["labels"], h))
+    return path, problems
+
+
+def virtual_run(app: str, out_dir: str, hist_rows: list,
+                calibration=None) -> tuple[str, list[str]]:
+    """One deterministic replay of the app's recorded trace with a span
+    tracer on the virtual clock; returns (trace path, problems)."""
+    wl = _catalog()[app]
+    client, _root, traces = record_workload(wl, runs=2)
+    reg = client.logic_module.registered[wl.name]
+    predictor = make_pos_predictor("static-capre", config=SessionConfig(rop_depth=2))
+    predictor.warm(traces[0].accesses)
+    tracer = Tracer(session=f"{app}-replay")
+    result = replay(traces[-1], predictor, client.store, reg, dispatch="batch",
+                    tracer=tracer, calibration=calibration)
+    spans = tracer.spans()
+    problems = _validate(f"{app}/virtual", spans, clock="virtual")
+    path = os.path.join(out_dir, f"{app}_replay.trace.json")
+    if not problems:
+        write_chrome_trace(path, spans, clock="virtual")
+    hist_rows.append(_hist_row(f"{app}/virtual", "virtual", "stall_s", {"app": app}, {
+        "count": result.evaluated, "sum": result.stall_seconds,
+        "p50": result.stall_p50_s, "p99": result.stall_p99_s,
+        "p999": result.stall_p999_s,
+    }))
+    return path, problems
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--apps", default="bank,oo7",
+                    help="comma-separated catalog apps to replay (the first "
+                         "also gets a live wall-clock run)")
+    ap.add_argument("--out", default=os.path.join("artifacts", "obs"))
+    args = ap.parse_args(argv)
+    apps = [a for a in args.apps.split(",") if a]
+    os.makedirs(args.out, exist_ok=True)
+    calibration = load_calibration()
+    hist_rows: list[dict] = []
+    problems: list[str] = []
+    path, p = wall_run(apps[0], args.out, hist_rows)
+    problems += p
+    if not p:
+        print(f"wall timeline: {path}")
+    for app in apps:
+        path, p = virtual_run(app, args.out, hist_rows, calibration=calibration)
+        problems += p
+        if not p:
+            print(f"virtual timeline: {path}")
+    hist_path = os.path.join(args.out, "histograms.csv")
+    with open(hist_path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=list(hist_rows[0].keys()))
+        writer.writeheader()
+        writer.writerows(hist_rows)
+    print(f"histograms: {hist_path} ({len(hist_rows)} rows)")
+    if problems:
+        print("TIMELINE VALIDATION FAILED:")
+        for msg in problems:
+            print(f"  {msg}")
+        return 1
+    print(f"timeline validation: ok ({len(apps)} virtual + 1 wall)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -88,6 +88,10 @@ class SessionConfig:
     markov_fanout: int = 8
     markov_chain: int = 4
     warm_trace: Optional[list] = None  # recorded ObjectStore.trace to mine
+    # observability label: spans and registry sources this session creates
+    # carry it (the per-tenant label scheme the future loadgen item will
+    # drive; see DESIGN.md section 3.7)
+    session_label: str = ""
 
 
 class Session:
@@ -105,6 +109,16 @@ class Session:
         # the store drains registered runtimes in reset_runtime_state so
         # straggler prefetch tasks cannot leak across benchmark repetitions
         store.register_runtime(self.runtime)
+        # wire this session into the store's observability context (if one
+        # is attached): its runtime queue depths become a registry source,
+        # and spans opened while it runs carry its label
+        self.label = self.config.session_label or f"s{id(self) & 0xFFFF:04x}"
+        if store.obs is not None:
+            store.obs.registry.register_source(
+                f"runtime/{self.label}", self.runtime.stats
+            )
+            if store.obs.tracer is not None and self.config.session_label:
+                store.obs.tracer.session = self.config.session_label
         # Save whatever listeners are already installed (another session's
         # monitoring) instead of clobbering them: a predictor bound below
         # may overwrite them, and close() puts the saved ones back.  A

@@ -74,6 +74,16 @@ class PrefetchRuntime:
 
     # -- API -----------------------------------------------------------------
 
+    def stats(self) -> dict:
+        """Queue-depth snapshot for the observability registry (a Session
+        registers this as a ``runtime`` source)."""
+        with self._lock:
+            return {
+                "scheduled": self.scheduled,
+                "submitted_tasks": self.submitted_tasks,
+                "outstanding": self._outstanding,
+            }
+
     def schedule(self, fn) -> None:
         """Submit a generated prefetch method to the background executor
         (the paper's injected ``prefetchingExecutor.submit``)."""

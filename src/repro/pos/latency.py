@@ -42,6 +42,21 @@ class LatencyModel:
     def is_zero(self) -> bool:
         return self.disk_load == 0 and self.remote_hop == 0 and self.write_back == 0
 
+    def scaled(self, scale: float) -> "LatencyModel":
+        """A copy with every *time* constant multiplied by ``scale`` (slot
+        counts untouched) — how the fitted wall-vs-virtual calibration
+        factors (``predict.calibration``) are applied to a replay model."""
+        from dataclasses import replace
+
+        return replace(
+            self,
+            disk_load=self.disk_load * scale,
+            remote_hop=self.remote_hop * scale,
+            write_back=self.write_back * scale,
+            think=self.think * scale,
+            dispatch_overhead=self.dispatch_overhead * scale,
+        )
+
 
 ZERO = LatencyModel(disk_load=0.0, remote_hop=0.0, write_back=0.0, think=0.0)
 DEFAULT = LatencyModel()
@@ -72,6 +87,7 @@ class VirtualDisk:
         self.loads = 0
         self.write_backs = 0
         self.busy_seconds = 0.0
+        self.last_slot = 0  # slot index taken by the most recent _occupy
 
     def _occupy(self, t: float, seconds: float) -> tuple[float, float]:
         i = min(range(len(self._slots)), key=self._slots.__getitem__)
@@ -79,6 +95,7 @@ class VirtualDisk:
         done = start + seconds
         self._slots[i] = done
         self.busy_seconds += seconds
+        self.last_slot = i
         return start, done
 
     def schedule(self, t: float) -> tuple[float, float]:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Optional
 
@@ -100,6 +101,15 @@ class DataService:
         # the shared StoreMetrics too (None for a standalone DataService)
         self._owner: Optional["ObjectStore"] = None
 
+    @property
+    def _tracer(self):
+        """The owning store's span tracer, if observability is attached
+        (None otherwise — a standalone DataService records no spans).  The
+        tracer's lock is a leaf, so calls are safe under the cache lock."""
+        owner = self._owner
+        obs = owner.obs if owner is not None else None
+        return obs.tracer if obs is not None else None
+
     def _touch(self, oid: int, prefetch: bool = False) -> list[tuple["DataService", int]]:
         """Policy bump/insert + bounded-capacity eviction (callers hold the
         cache lock).  Returns the dirty ``(service, victim)`` pairs that now
@@ -129,6 +139,9 @@ class DataService:
         flush if dirty.  Callers hold the cache lock."""
         self.cache.pop(victim, None)
         self.evictions += 1
+        tr = self._tracer
+        if tr is not None:
+            tr.evicted(victim)  # terminal "evicted" for an unused prefetch span
         if victim in self.dirty:
             self.dirty.discard(victim)
             self.dirty_evictions += 1
@@ -293,8 +306,8 @@ class DataService:
         lanes = max(1, min(self.latency.parallel_per_ds, len(oids)))
         if pool is not None and lanes > 1:
             for i in range(1, lanes):
-                pool.submit(self._load_lane, oids[i::lanes], prefetch)
-            self._load_lane(oids[0::lanes], prefetch)
+                pool.submit(self._load_lane, oids[i::lanes], prefetch, i)
+            self._load_lane(oids[0::lanes], prefetch, 0)
         else:
             self._load_lane(oids, prefetch)
 
@@ -303,11 +316,14 @@ class DataService:
     #: long a demand access coalescing onto a claimed oid can wait
     _LANE_CHUNK = 4
 
-    def _load_lane(self, oids: list[int], prefetch: bool) -> None:
+    def _load_lane(self, oids: list[int], prefetch: bool, lane: int = 0) -> None:
         """One pipeline lane of a batched load: claim a chunk under one
         lock, occupy a disk arm for the chunk's sequential loads, land the
         chunk under one lock.  Oids that became resident (or in flight
-        elsewhere) since the batch was deduped are skipped at claim time."""
+        elsewhere) since the batch was deduped are skipped at claim time.
+        With a tracer attached, each chunk records its slot wait vs disk
+        service split (chunk-granular: the chunk shares one slot hold)."""
+        tr = self._tracer
         pending = list(oids)
         while pending:
             # the lane re-acquires the slot back-to-back; without this
@@ -326,11 +342,14 @@ class DataService:
                         chunk.append((oid, ev))
             if not chunk:
                 continue
+            t_q = time.perf_counter() if tr is not None else 0.0
             flushes: list[tuple[DataService, int]] = []
             try:
                 with self._slots:
+                    t_s = time.perf_counter() if tr is not None else 0.0
                     # k sequential loads pipelined on one disk arm
                     self.latency.sleep(self.latency.disk_load * len(chunk))
+                    t_d = time.perf_counter() if tr is not None else 0.0
                 with self._cache_lock:
                     for oid, _ev in chunk:
                         flushes.extend(self._touch(oid, prefetch=prefetch))
@@ -340,10 +359,15 @@ class DataService:
                 with self._cache_lock:
                     for oid, _ev in chunk:
                         self._inflight.pop(oid, None)
+                if tr is not None:
+                    tr.dropped([oid for oid, _ev in chunk], "load-error")
                 raise
             finally:
                 for _oid, ev in chunk:
                     ev.set()
+            if tr is not None:
+                tr.loaded([oid for oid, _ev in chunk], self.ds_id, lane,
+                          t_q, t_s, t_d)
             for vds, victim in flushes:
                 vds._flush(victim)
 
@@ -486,6 +510,23 @@ class ObjectStore:
         # optional callback fired on EVERY application-path access (hit or
         # miss) — the monitoring hook the trace-mined predictors pay for
         self.access_listener = None
+        # observability context (repro.obs.Observability): attach_obs wires
+        # the metrics registry + optional span tracer; None = uninstrumented
+        # (the hot paths then skip every obs branch)
+        self.obs = None
+        self._stall_hists: Optional[dict[int, Any]] = None
+
+    def attach_obs(self, obs) -> None:
+        """Attach an ``Observability`` context: registers this store's
+        metrics as a registry source and pre-resolves the per-service demand
+        stall histograms so the application path never hits the registry's
+        lookup lock.  Span tracing activates iff ``obs.tracer`` is set."""
+        self.obs = obs
+        obs.registry.register_source("store", self.snapshot_metrics)
+        self._stall_hists = {
+            ds.ds_id: obs.registry.histogram("demand_stall_s", service=ds.ds_id)
+            for ds in self.services
+        }
 
     # -- placement ---------------------------------------------------------
 
@@ -536,7 +577,17 @@ class ObjectStore:
         that service's memory."""
         ds = self.service_of(oid)
         self._redirect(ctx, ds)
-        did_load = ds.load_into_memory(oid)
+        obs = self.obs
+        if obs is None:
+            did_load = ds.load_into_memory(oid)
+        else:
+            t0 = time.perf_counter()
+            did_load = ds.load_into_memory(oid)
+            stall = time.perf_counter() - t0
+            self._stall_hists[ds.ds_id].record(stall)
+            if obs.tracer is not None:
+                obs.tracer.demand(oid, ds.ds_id, t0, stall, did_load,
+                                  self.latency.disk_load)
         with self._metrics_lock:
             self.metrics.app_loads += 1
             if did_load:
@@ -560,7 +611,17 @@ class ObjectStore:
         workloads undercounted demand."""
         ds = self.service_of(oid)
         self._redirect(ctx, ds)
-        did_load = ds.write(oid)
+        obs = self.obs
+        if obs is None:
+            did_load = ds.write(oid)
+        else:
+            t0 = time.perf_counter()
+            did_load = ds.write(oid)
+            stall = time.perf_counter() - t0
+            self._stall_hists[ds.ds_id].record(stall)
+            if obs.tracer is not None:
+                obs.tracer.demand(oid, ds.ds_id, t0, stall, did_load,
+                                  self.latency.disk_load)
         with self._metrics_lock:
             self.metrics.writes += 1
             if did_load:
@@ -593,14 +654,27 @@ class ObjectStore:
 
     # -- prefetch-path access ----------------------------------------------
 
-    def prefetch_access(self, oid: int) -> PersistentObject:
+    def prefetch_access(self, oid: int, origin: str = "") -> PersistentObject:
         """Per-oid prefetch: load ``oid`` into its own Data Service's memory
         (no execution redirection: 'dataClay ... loads the object where it
         is stored').  This is the legacy one-task-per-oid dispatch target
         (``dispatch="per-oid"``); each call was one executor submission, so
         it also counts one ``batch_dispatches``."""
         ds = self.service_of(oid)
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.predicted([oid], origin)
+            tr.dispatched([oid], ds.ds_id, tr.new_batch())
+            t_q = time.perf_counter()
+            tr.claimed([oid], ds.ds_id, t=t_q)
         did_load = ds.load_into_memory(oid, prefetch=True)
+        if tr is not None:
+            if did_load:
+                # per-oid loads have no slot-wait visibility: the whole
+                # load_into_memory window counts as queue+disk
+                tr.loaded([oid], ds.ds_id, 0, t_q, t_q, time.perf_counter())
+            else:
+                tr.suppressed([oid], ds.ds_id)
         with ds._cache_lock:
             ds.prefetch_requests += 1
             ds.batch_dispatches += 1
@@ -610,7 +684,8 @@ class ObjectStore:
             self.prefetched_oids.add(oid)
         return ds.disk[oid]
 
-    def prefetch_batch(self, oids: Iterable[int], runtime=None) -> int:
+    def prefetch_batch(self, oids: Iterable[int], runtime=None,
+                       origin: str = "") -> int:
         """Batched, placement-aware prefetch dispatch: group the predicted
         ``oids`` (already in predicted-need order) by owning Data Service,
         dedupe each group against that service's cache *and* in-flight loads
@@ -629,10 +704,21 @@ class ObjectStore:
         with self._prefetch_lock:
             for batch in groups.values():
                 self.prefetched_oids.update(batch)
+        tr = self.obs.tracer if self.obs is not None else None
         submitted = 0
         for ds_id, batch in groups.items():
             ds = self.services[ds_id]
+            if tr is not None:
+                tr.predicted(batch, origin)
+                tr.dispatched(batch, ds_id, tr.new_batch())
             todo = ds.claim_prefetch_batch(batch)
+            if tr is not None:
+                if todo:
+                    tr.claimed(todo, ds_id)
+                won = set(todo)
+                lost = [o for o in batch if o not in won]
+                if lost:
+                    tr.suppressed(lost, ds_id)
             if not todo:
                 continue
             submitted += 1
@@ -701,6 +787,10 @@ class ObjectStore:
                     stacklevel=2,
                 )
                 runtime.hard_drain(drain_timeout)
+        if self.obs is not None and self.obs.tracer is not None:
+            # lifecycle invariant through resets: whatever is still live
+            # (cancelled work, never-demanded residents) terminates now
+            self.obs.tracer.drop_active("drained")
         for ds in self.services:
             ds.drop_cache()
             ds.reset_counters()

@@ -60,6 +60,11 @@ class Overhead:
     # before submission because they were already cached / in flight
     batch_dispatches: int = 0
     dedup_suppressed: int = 0
+    # instrumentation self-accounting (repro.obs): what the observability
+    # layer itself cost this run — charged here so CAPre's zero-overhead
+    # claim stays falsifiable *with the instruments attached*
+    obs_seconds: float = 0.0
+    obs_events: int = 0
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -167,16 +172,22 @@ class Predictor:
         cfg = self.session.config if self.session is not None else None
         return getattr(cfg, "dispatch", "batch")
 
-    def _emit(self, oids: Iterable[int]) -> list[int]:
+    def _emit(self, oids: Iterable[int], context: str = "") -> list[int]:
         """Account predictions; when bound, dispatch their loads on the
         session's background runtime — batched per Data Service by default,
-        or one pool task per oid in "per-oid" mode."""
+        or one pool task per oid in "per-oid" mode.  ``context`` names the
+        point in the program that triggered the prediction (method key /
+        hint node); spans carry it as ``origin = "<predictor>:<context>"``."""
         out = [o for o in oids]
         self.overhead.predictions += len(out)
         if out and self.session is not None:
             store = self.session.store
+            origin = f"{self.name}:{context}" if context else self.name
             if self._dispatch_mode() == "batch":
-                store.prefetch_batch(out, runtime=self.session.runtime)
+                store.prefetch_batch(out, runtime=self.session.runtime,
+                                     origin=origin)
             else:
-                self.session.runtime.fan_out(store.prefetch_access, out)
+                self.session.runtime.fan_out(
+                    lambda oid: store.prefetch_access(oid, origin=origin), out
+                )
         return out

@@ -410,7 +410,9 @@ class VirtualReplay:
 
     def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
                  policy: str = DEFAULT_POLICY, shared_budget: bool = False,
-                 dispatch: str = "per-oid"):
+                 dispatch: str = "per-oid", tracer=None):
+        from repro.obs import Histogram, Meter
+
         n = len(store.services)
         self.store = store
         self.latency = latency
@@ -457,6 +459,18 @@ class VirtualReplay:
         self.batch_dispatches = 0  # executor submissions the predictions cost
         self.dedup_suppressed = 0  # oids suppressed before submission (batch mode)
         self._evicted_ever: set[int] = set()
+        # observability (repro.obs): the virtual clock affords an *exact*
+        # per-demand-event stall distribution (every event records 0.0 on a
+        # residency hit, the remainder on a partial, the full queue+service
+        # wait on a miss) and, optionally, the same lifecycle spans the live
+        # store traces — virtual timestamps land in the same span fields, so
+        # wall and virtual timelines export through one code path.  The
+        # instrumentation's own wall cost accrues on ``obs_meter``.
+        self.obs_meter = Meter()
+        self.stall_hist = Histogram("stall_s", exact=True, meter=self.obs_meter)
+        self.tracer = tracer
+        if tracer is not None and tracer.meter is None:
+            tracer.meter = self.obs_meter
 
     # -- cache mechanics ----------------------------------------------------
 
@@ -501,6 +515,8 @@ class VirtualReplay:
     def _evict(self, ds_i: int, victim_oid: int) -> None:
         victim = self.caches[ds_i].pop(victim_oid)
         self.evictions += 1
+        if self.tracer is not None:
+            self.tracer.evicted(victim_oid, t=self.t)
         self._evicted_ever.add(victim_oid)
         if victim.source == "pf" and not victim.used:
             self.evicted_before_use += 1
@@ -513,7 +529,7 @@ class VirtualReplay:
 
     # -- the two event kinds -------------------------------------------------
 
-    def predict(self, oids: Sequence[int]) -> None:
+    def predict(self, oids: Sequence[int], origin: str = "") -> None:
         """Predictor emitted ``oids`` at the current virtual time: schedule
         a disk load on each one's own Data Service unless already resident
         or in flight (request coalescing).  Dispatch overhead charges at
@@ -522,8 +538,9 @@ class VirtualReplay:
         serializes task starts; the application clock itself is not
         advanced, prefetch dispatch runs on background threads)."""
         if self.dispatch == "batch":
-            self._predict_batched(oids)
+            self._predict_batched(oids, origin=origin)
             return
+        tr = self.tracer
         overhead = self.latency.dispatch_overhead
         for i, oid in enumerate(oids):
             issue_t = self.t + (i + 1) * overhead
@@ -533,18 +550,30 @@ class VirtualReplay:
             self._materialize(ds_i, self.t)
             self.prefetch_requests += 1
             self.batch_dispatches += 1  # per-oid: every oid is a submission
+            if tr is not None:
+                tr.predicted([oid], origin, t=self.t)
+                tr.dispatched([oid], ds_i, tr.new_batch(), t=self.t)
             cache = self.caches[ds_i]
             if oid in cache:
                 # policy bump only (a prefetch touch must not count as the
                 # application using the line), keep source/used
                 self.policies[ds_i].note_access(oid, prefetch=True)
+                if tr is not None:
+                    tr.suppressed([oid], ds_i, t=self.t)
                 continue
             if oid in self.inflight[ds_i]:
+                if tr is not None:
+                    tr.suppressed([oid], ds_i, t=self.t)
                 continue
-            self.inflight[ds_i][oid] = self.disks[ds_i].schedule(issue_t)
+            start, done = self.disks[ds_i].schedule(issue_t)
+            self.inflight[ds_i][oid] = (start, done)
             self.prefetch_loads += 1
+            if tr is not None:
+                tr.claimed([oid], ds_i, t=issue_t)
+                tr.loaded([oid], ds_i, self.disks[ds_i].last_slot,
+                          issue_t, start, done)
 
-    def _predict_batched(self, oids: Sequence[int]) -> None:
+    def _predict_batched(self, oids: Sequence[int], origin: str = "") -> None:
         """The batched mirror of ``ObjectStore.prefetch_batch``: group by
         owning Data Service in predicted-need order, dedupe each group
         against residency and in-flight loads before submission, then issue
@@ -552,10 +581,14 @@ class VirtualReplay:
         groups: dict[int, list[int]] = {}
         for oid in oids:
             groups.setdefault(self.store.service_of(oid).ds_id, []).append(oid)
+        tr = self.tracer
         overhead = self.latency.dispatch_overhead
         submitted = 0
         for ds_i, batch in groups.items():
             self._materialize(ds_i, self.t)
+            if tr is not None:
+                tr.predicted(batch, origin, t=self.t)
+                tr.dispatched(batch, ds_i, tr.new_batch(), t=self.t)
             todo: list[int] = []
             claimed: set[int] = set()
             cache = self.caches[ds_i]
@@ -569,15 +602,23 @@ class VirtualReplay:
                 else:
                     claimed.add(oid)
                     todo.append(oid)
+            if tr is not None:
+                lost = [o for o in batch if o not in claimed]
+                if lost:
+                    tr.suppressed(lost, ds_i, t=self.t)
             if not todo:
                 continue
             submitted += 1
             self.batch_dispatches += 1
             issue_t = self.t + submitted * overhead
-            spans = self.disks[ds_i].schedule_batch(issue_t, len(todo))
-            for oid, span in zip(todo, spans):
-                self.inflight[ds_i][oid] = span
+            disk = self.disks[ds_i]
+            for oid in todo:
+                start, done = disk.schedule(issue_t)
+                self.inflight[ds_i][oid] = (start, done)
                 self.prefetch_loads += 1
+                if tr is not None:
+                    tr.claimed([oid], ds_i, t=issue_t)
+                    tr.loaded([oid], ds_i, disk.last_slot, issue_t, start, done)
 
     def access(self, oid: int, write: bool = False) -> None:
         """Application touches ``oid`` (read navigation, or field update
@@ -595,6 +636,7 @@ class VirtualReplay:
         if write:
             self.writes += 1
         needed_at = self.t
+        tr = self.tracer
         cache = self.caches[ds_i]
         entry = cache.get(oid)
         if entry is not None:
@@ -608,6 +650,10 @@ class VirtualReplay:
             entry.used = True
             if write:
                 self.write_hits += 1
+            self.stall_hist.record(0.0)
+            if tr is not None:
+                tr.demand(oid, ds_i, needed_at, 0.0, False,
+                          self.latency.disk_load, t=needed_at)
         elif oid in self.inflight[ds_i]:
             # predicted, still in flight: the app waits out the remainder
             _start, done = self.inflight[ds_i].pop(oid)
@@ -618,17 +664,26 @@ class VirtualReplay:
             self.partial += 1
             self._insert(ds_i, oid, "pf", used=True)
             entry = self.caches[ds_i].get(oid)
+            self.stall_hist.record(stall)
+            if tr is not None:
+                tr.demand(oid, ds_i, needed_at, stall, False,
+                          self.latency.disk_load, t=done)
         else:
             # unpredicted (or evicted): full demand load, queueing behind
             # whatever the prefetcher has piled onto this service's disk
             _start, done = self.disks[ds_i].schedule(needed_at)
-            self.stall_seconds += done - needed_at
+            stall = done - needed_at
+            self.stall_seconds += stall
             self.t = done
             self.demand_loads += 1
             if oid in self._evicted_ever:
                 self.thrash_misses += 1
             self._insert(ds_i, oid, "demand", used=True)
             entry = self.caches[ds_i].get(oid)
+            self.stall_hist.record(stall)
+            if tr is not None:
+                tr.demand(oid, ds_i, needed_at, stall, True,
+                          self.latency.disk_load, t=done)
         if write and entry is not None:
             entry.dirty = True
         self.t += self.latency.think
@@ -667,6 +722,17 @@ class ReplayResult:
     flushed_writes: int
     batch_dispatches: int
     dedup_suppressed: int
+    # per-operation stall distribution (exact percentiles over every demand
+    # event on the virtual clock: 0.0 = fully hidden / resident, up to a
+    # full queued demand load) — the tail metrics the multi-tenant
+    # north-star reports
+    stall_p50_s: float = 0.0
+    stall_p99_s: float = 0.0
+    stall_p999_s: float = 0.0
+    # virtual stalls re-expressed in calibrated wall seconds (the fitted
+    # per-app scale from artifacts/predict/calibration.csv; 1.0 = unfitted)
+    calib_scale: float = 1.0
+    calibrated_stall_s: float = 0.0
     overhead: dict = field(default_factory=dict)
 
     def row(self) -> dict:
@@ -704,12 +770,19 @@ def replay(
     shared_budget: bool = False,
     dispatch: str = "per-oid",
     baseline_stall_seconds: Optional[float] = None,
+    tracer=None,
+    calibration=None,
 ) -> ReplayResult:
     """Drive ``predictor`` through the recorded event stream on the virtual
-    clock and score what its prefetches would have hidden."""
+    clock and score what its prefetches would have hidden.  Pass a
+    ``repro.obs.Tracer`` to collect full lifecycle spans (virtual
+    timestamps) and a ``predict.calibration.Calibration`` to report the
+    stalls in calibrated wall seconds too."""
     predictor.attach(store, reg)
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
-                           policy=policy, shared_budget=shared_budget, dispatch=dispatch)
+                           policy=policy, shared_budget=shared_budget, dispatch=dispatch,
+                           tracer=tracer)
+    name = predictor.name
     predicted: set[int] = set()
     accessed: set[int] = set()
     n_access, covered = 0, 0
@@ -717,7 +790,7 @@ def replay(
         if ev.kind == METHOD_ENTRY:
             out = predictor.on_method_entry(ev.method_key, ev.oid)
             predicted.update(out)
-            engine.predict(out)
+            engine.predict(out, origin=f"{name}:{ev.method_key}")
         else:
             oid = ev.oid
             n_access += 1
@@ -731,7 +804,11 @@ def replay(
                 engine.access(oid)
                 out = predictor.on_access(oid, store.cls_of(oid))
             predicted.update(out)
-            engine.predict(out)
+            engine.predict(out, origin=f"{name}:on_access")
+    if tracer is not None:
+        # lifecycle invariant at end of run: still-active spans (predicted
+        # or resident-but-never-demanded) terminate as dropped
+        tracer.drop_active("replay-end", t=engine.t)
     if baseline_stall_seconds is None:
         baseline_stall_seconds = replay_baseline(
             trace, store, latency=latency, cache_capacity=cache_capacity,
@@ -752,6 +829,13 @@ def replay(
     overhead["protected_evictions"] = engine.protected_evictions
     overhead["batch_dispatches"] = engine.batch_dispatches
     overhead["dedup_suppressed"] = engine.dedup_suppressed
+    # what the instruments themselves cost this replay (histogram recording
+    # + span bookkeeping), charged to the ledger like any other overhead
+    overhead["obs_seconds"] = engine.obs_meter.seconds
+    overhead["obs_events"] = engine.obs_meter.events
+    p50, p99, p999 = engine.stall_hist.percentiles((0.5, 0.99, 0.999))
+    scale = (calibration.scale_for(_calibration_app_key(trace.app_name, trace.workload))
+             if calibration is not None else 1.0)
     return ReplayResult(
         app=trace.app_name,
         workload=trace.workload,
@@ -783,8 +867,19 @@ def replay(
         flushed_writes=engine.flushed_writes,
         batch_dispatches=engine.batch_dispatches,
         dedup_suppressed=engine.dedup_suppressed,
+        stall_p50_s=p50 or 0.0,
+        stall_p99_s=p99 or 0.0,
+        stall_p999_s=p999 or 0.0,
+        calib_scale=scale,
+        calibrated_stall_s=engine.stall_seconds * scale,
         overhead=overhead,
     )
+
+
+def _calibration_app_key(app: str, workload: str) -> str:
+    """Catalog key a result calibrates under — the mutating bank traversal
+    is fitted separately (mirrors ``benchmarks/calibrate_latency.py``)."""
+    return "bank_write" if workload == "setAllTransCustomers" else app
 
 
 def evaluate_workload(
@@ -798,6 +893,7 @@ def evaluate_workload(
     dispatch_modes: Sequence[str] = ("per-oid",),
     latency: LatencyModel = REPLAY,
     recorded: Optional[tuple[POSClient, int, list[RecordedTrace]]] = None,
+    calibration=None,
 ) -> list[ReplayResult]:
     """Record (train + eval runs), then replay every requested predictor
     under every (cache capacity, eviction policy, dispatch mode) — miners
@@ -833,6 +929,7 @@ def evaluate_workload(
                             shared_budget=shared_budget,
                             dispatch=dispatch,
                             baseline_stall_seconds=baseline,
+                            calibration=calibration,
                         )
                     )
     return results
@@ -848,15 +945,39 @@ def evaluate_apps(
     dispatch_modes: Sequence[str] = ("per-oid",),
     latency: LatencyModel = REPLAY,
     trace_cache: Optional[str] = "default",
+    calibration=None,
+    calibrated: bool = False,
 ) -> list[ReplayResult]:
+    """``calibrated=True`` replays each app under its calibrated latency
+    model (``calibration.calibrated_model``) instead of the raw REPLAY
+    constants — virtual seconds then read directly as predicted wall
+    seconds.  Off by default: the committed baseline.csv is recorded in
+    raw virtual units."""
     catalog = _catalog()
     for name in apps:
         if name not in catalog:
             raise KeyError(f"unknown app {name!r}; catalog: {sorted(catalog)}")
+    if calibration is None:
+        # one loader, one source of truth: the fitted per-app scales come
+        # from artifacts/predict/calibration.csv (identity when unfitted)
+        from .calibration import load_calibration
+
+        calibration = load_calibration()
     recorded = record_catalog([catalog[name] for name in apps],
                               cache_dir=_resolve_trace_cache(trace_cache))
     out: list[ReplayResult] = []
+    wl_calibration = calibration
     for name in apps:
+        wl_latency = latency
+        if calibrated:
+            from .calibration import Calibration, calibrated_model
+
+            # catalog keys are the calibration table's app keys; the clock
+            # itself is now in wall units, so the post-hoc column scale is
+            # identity (calibrated_stall_s == stall_seconds, no re-scaling)
+            wl_latency = calibrated_model(name, base=latency,
+                                          calibration=calibration)
+            wl_calibration = Calibration()
         out.extend(
             evaluate_workload(
                 catalog[name],
@@ -866,8 +987,9 @@ def evaluate_apps(
                 policies=policies,
                 shared_budget=shared_budget,
                 dispatch_modes=dispatch_modes,
-                latency=latency,
+                latency=wl_latency,
                 recorded=recorded[name],
+                calibration=wl_calibration,
             )
         )
     return out
@@ -891,6 +1013,10 @@ _COLUMNS = (
     ("timely_coverage", "{:.3f}"),
     ("partial_hide", "{:.3f}"),
     ("stall_seconds", "{:.4f}"),
+    ("stall_p50_s", "{:.4f}"),
+    ("stall_p99_s", "{:.4f}"),
+    ("stall_p999_s", "{:.4f}"),
+    ("calibrated_stall_s", "{:.4f}"),
     ("baseline_stall_seconds", "{:.4f}"),
     ("stall_saved_pct", "{:.1f}"),
     ("evictions", "{}"),
@@ -919,6 +1045,9 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     "shared_budget",
     "batch_dispatches",
     "dedup_suppressed",
+    "calib_scale",
+    "obs_seconds",
+    "obs_events",
 )
 
 
@@ -974,6 +1103,10 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="comma-separated dispatch modes to sweep (per-oid = one "
                          "executor submission per predicted oid; batch = one "
                          "deduped request per Data Service)")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="replay each app under its calibrated latency model "
+                         "(fitted scales from artifacts/predict/calibration.csv) "
+                         "so virtual stalls read directly as predicted wall seconds")
     ap.add_argument("--no-trace-cache", action="store_true",
                     help="always re-record workload traces instead of reusing "
                          "the disk-memoized ones under artifacts/predict/traces")
@@ -995,6 +1128,7 @@ def main(argv: Optional[list[str]] = None) -> None:
         policies=policies, shared_budget=args.shared_budget,
         dispatch_modes=dispatch_modes,
         trace_cache=None if args.no_trace_cache else "default",
+        calibrated=args.calibrated,
     )
     print(format_table(results))
     if not args.no_csv:

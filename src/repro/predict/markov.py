@@ -135,4 +135,4 @@ class MarkovMiner(Predictor):
             o for o in self.predict_next(self._history) if o not in self._issued
         ]
         self._issued.update(preds)
-        return self._emit(preds)
+        return self._emit(preds, context=f"access-{oid}")

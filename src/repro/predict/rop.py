@@ -76,7 +76,8 @@ class Rop(Predictor):
                 def bfs_batch(root_oid: int) -> None:
                     out = self._frontier(root_oid, lambda _ref: None)
                     self.overhead.predictions += len(out)
-                    store.prefetch_batch(out, runtime=runtime)
+                    store.prefetch_batch(out, runtime=runtime,
+                                         origin=f"rop:miss-{root_oid}")
 
                 runtime.fan_out(bfs_batch, [oid])
                 return []

@@ -157,7 +157,7 @@ class StaticCapre(Predictor):
         tree = self._trees.get(method_key)
         if tree is None:
             return
-        self._submit_expansion([(this_oid, tree)])
+        self._submit_expansion([(this_oid, tree)], origin=f"capre:{method_key}")
 
     def _memo_active(self, store) -> bool:
         """Subtree dedupe is only sound while nothing can leave the cache:
@@ -171,7 +171,7 @@ class StaticCapre(Predictor):
             ds.cache_capacity == 0 for ds in store.services
         )
 
-    def _submit_expansion(self, roots) -> None:
+    def _submit_expansion(self, roots, origin: str = "capre") -> None:
         store, runtime = self.session.store, self.session.runtime
 
         dispatched = self._dispatched if self._memo_active(store) else None
@@ -182,7 +182,7 @@ class StaticCapre(Predictor):
             def flush() -> None:
                 if seg:
                     self.overhead.predictions += len(seg)
-                    store.prefetch_batch(seg, runtime=runtime)
+                    store.prefetch_batch(seg, runtime=runtime, origin=origin)
                     seg.clear()
 
             stack = list(reversed(roots))
@@ -215,7 +215,8 @@ class StaticCapre(Predictor):
                         if len(elems) > self.SUBTREE_GROUP:
                             for i in range(0, len(elems), self.SUBTREE_GROUP):
                                 self._submit_expansion(
-                                    [(e, child) for e in elems[i:i + self.SUBTREE_GROUP]]
+                                    [(e, child) for e in elems[i:i + self.SUBTREE_GROUP]],
+                                    origin=origin,
                                 )
                             continue
                         pushes.extend((e, child) for e in elems)

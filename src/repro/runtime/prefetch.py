@@ -77,6 +77,13 @@ class WeightStreamer:
         groups in tree order (schema heuristic, plan-blind);
       * "markov-miner" / "hybrid": trace-mined group transitions — warm
         them with ``warm_group_trace`` (the ``group_log`` of a prior run).
+
+    ``dispatch`` mirrors ``ObjectStore``'s A/B knob: ``"batch"`` (default)
+    pipelines each plan group through at most ``workers`` strided lanes,
+    ``"per-oid"`` submits one pool task per path (the legacy reference).
+    Passing a ``repro.obs.Registry`` adopts :class:`StreamMetrics` as a
+    snapshot source and records every ``get`` wait into a
+    ``stream_stall_s`` histogram (0.0 for prefetch hits).
     """
 
     def __init__(
@@ -88,13 +95,22 @@ class WeightStreamer:
         rop_depth: int = 1,
         workers: int = 4,
         warm_group_trace: Optional[list] = None,
+        dispatch: str = "batch",
+        registry=None,
     ):
         self.store = store
         self.plan = plan
         self.mode = mode
         self.k_ahead = k_ahead
         self.rop_depth = rop_depth
+        self.dispatch = dispatch
         self.metrics = StreamMetrics()
+        self._stall_hist = None
+        if registry is not None:
+            from dataclasses import asdict
+
+            registry.register_source("stream", lambda: asdict(self.metrics))
+            self._stall_hist = registry.histogram("stream_stall_s")
         self._cache: dict[str, np.ndarray] = {}
         self._inflight: dict[str, threading.Event] = {}
         self._used: set[str] = set()  # paths actually served to compute
@@ -154,7 +170,21 @@ class WeightStreamer:
         fan-out paid a lock round trip and a pool submission per path), then
         pipeline the survivors through at most ``workers`` lanes — strided,
         so the earliest-needed records start first on every lane.  This is
-        the streaming analogue of ``ObjectStore.prefetch_batch``."""
+        the streaming analogue of ``ObjectStore.prefetch_batch``.
+
+        Under ``dispatch="per-oid"`` the same request instead pays one lock
+        round trip and one pool submission per path — the reference arm of
+        the dispatch A/B (``benchmarks.bench_streaming``)."""
+        if self.dispatch == "per-oid":
+            for path in paths:
+                with self._lock:
+                    if path in self._cache or path in self._inflight:
+                        self.metrics.dedup_suppressed += 1
+                        continue
+                    self._inflight[path] = threading.Event()
+                    self.metrics.batch_dispatches += 1
+                self._pool.submit(self._fetch_lane, [path])
+            return
         todo: list[str] = []
         with self._lock:
             for path in paths:
@@ -201,6 +231,8 @@ class WeightStreamer:
             self._used.add(path)
         if arr is not None:
             self.metrics.prefetch_hits += 1
+            if self._stall_hist is not None:
+                self._stall_hist.record(0.0)
             return arr
         t0 = time.perf_counter()
         if ev is None:
@@ -209,8 +241,11 @@ class WeightStreamer:
                 ev = self._inflight.get(path)
         if ev is not None:
             ev.wait(timeout=30.0)
+        stall = time.perf_counter() - t0
         self.metrics.stalls += 1
-        self.metrics.stall_seconds += time.perf_counter() - t0
+        self.metrics.stall_seconds += stall
+        if self._stall_hist is not None:
+            self._stall_hist.record(stall)
         with self._lock:
             return self._cache[path]
 

@@ -292,13 +292,15 @@ def test_invariants_on_seeded_random_sequences(policy, shared):
 
 
 def _mask_train_seconds(path):
-    """The one wall-clock cell in an otherwise virtual-clock CSV: blank it,
-    return the rest of the file byte-for-byte."""
+    """The wall-clock cells in an otherwise virtual-clock CSV (training time
+    and the instrumentation's self-metered cost): blank them, return the
+    rest of the file byte-for-byte."""
     with open(path, newline="") as f:
         rows = list(csv.reader(f))
-    col = rows[0].index("train_seconds")
+    cols = [rows[0].index(c) for c in ("train_seconds", "obs_seconds")]
     for row in rows[1:]:
-        row[col] = ""
+        for col in cols:
+            row[col] = ""
     out = io.StringIO()
     csv.writer(out).writerows(rows)
     return out.getvalue()

@@ -450,26 +450,27 @@ def test_compare_predict_gate_catches_drops_and_missing_rows(tmp_path):
 
     header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
               "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
-              "protected_evictions,dispatch,batch_dispatches,dedup_suppressed\n")
+              "protected_evictions,dispatch,batch_dispatches,dedup_suppressed,"
+              "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header
-                    + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0\n"
-                    + "bank,auditAll,markov-miner,64,lru,0.50,89.8,0,0,0,0,,per-oid,0,0\n")
+                    + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n"
+                    + "bank,auditAll,markov-miner,64,lru,0.50,89.8,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     ok = tmp_path / "ok.csv"
     ok.write_text(header
-                  + "bank,auditAll,static-capre,64,lru,0.985,98.0,0,0,0,0,,per-oid,0,0\n"
-                  + "bank,auditAll,markov-miner,64,lru,0.55,90.0,0,0,0,0,,per-oid,0,0\n")
+                  + "bank,auditAll,static-capre,64,lru,0.985,98.0,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n"
+                  + "bank,auditAll,markov-miner,64,lru,0.55,90.0,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     assert compare(str(ok), str(base)) == []
     dropped = tmp_path / "dropped.csv"
-    dropped.write_text(header + "bank,auditAll,static-capre,64,lru,0.80,80.0,0,0,0,0,,per-oid,0,0\n")
+    dropped.write_text(header + "bank,auditAll,static-capre,64,lru,0.80,80.0,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     failures = compare(str(dropped), str(base))
     assert len(failures) == 2  # the regression AND the vanished miner row
     assert any("0.800" in f and "static-capre" in f for f in failures)
     assert any("missing" in f and "markov-miner" in f for f in failures)
     empty = tmp_path / "empty_cell.csv"
     empty.write_text(header
-                     + "bank,auditAll,static-capre,64,lru,,98.0,0,0,0,0,,per-oid,0,0\n"
-                     + "bank,auditAll,markov-miner,64,lru,0.55,90.0,0,0,0,0,,per-oid,0,0\n")
+                     + "bank,auditAll,static-capre,64,lru,,98.0,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n"
+                     + "bank,auditAll,markov-miner,64,lru,0.55,90.0,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     assert any("empty" in f for f in compare(str(empty), str(base)))
 
 
@@ -480,9 +481,10 @@ def test_compare_predict_gate_enforces_write_columns(tmp_path):
 
     header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
               "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
-              "protected_evictions,dispatch,batch_dispatches,dedup_suppressed\n")
+              "protected_evictions,dispatch,batch_dispatches,dedup_suppressed,"
+              "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s\n")
     base = tmp_path / "baseline.csv"
-    base.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,21,21,0,0,,per-oid,0,0\n")
+    base.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,21,21,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     # (a) header without the write columns
     old_header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
                   "stall_saved_pct,protected_evictions\n")
@@ -492,12 +494,12 @@ def test_compare_predict_gate_enforces_write_columns(tmp_path):
     assert any("write-path columns missing" in f for f in failures)
     # (b) columns present but the mutating row's writes cell went empty
     hollow = tmp_path / "hollow.csv"
-    hollow.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,,,,,,per-oid,0,0\n")
+    hollow.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,,,,,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     failures = compare(str(hollow), str(base))
     assert any("writes cell is empty" in f for f in failures)
     # (c) intact file passes
     good = tmp_path / "good.csv"
-    good.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.96,91.0,21,21,0,0,,per-oid,0,0\n")
+    good.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.96,91.0,21,21,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     assert compare(str(good), str(base)) == []
 
 
@@ -508,13 +510,14 @@ def test_update_baseline_refuses_to_shrink_the_gate(tmp_path, capsys):
 
     header = ("app,workload,predictor,cache_capacity,policy,timely_coverage,"
               "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
-              "protected_evictions,dispatch,batch_dispatches,dedup_suppressed\n")
+              "protected_evictions,dispatch,batch_dispatches,dedup_suppressed,"
+              "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header
-                    + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0\n"
-                    + "bank,auditAll,static-capre,64,prefetch-aware,0.99,98.9,0,0,0,0,,per-oid,0,0\n")
+                    + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n"
+                    + "bank,auditAll,static-capre,64,prefetch-aware,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     partial = tmp_path / "partial.csv"
-    partial.write_text(header + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0\n")
+    partial.write_text(header + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     assert main([str(partial), str(base), "--update-baseline"]) == 1
     assert "refusing to shrink" in capsys.readouterr().out
     assert "prefetch-aware" in base.read_text()  # untouched
@@ -523,6 +526,6 @@ def test_update_baseline_refuses_to_shrink_the_gate(tmp_path, capsys):
     assert base.read_text() == partial.read_text()
     grown = tmp_path / "grown.csv"
     grown.write_text(partial.read_text()
-                     + "bank,auditAll,static-capre,64,prefetch-aware,0.99,98.9,0,0,0,0,,per-oid,0,0\n")
+                     + "bank,auditAll,static-capre,64,prefetch-aware,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     assert main([str(grown), str(base), "--update-baseline"]) == 0
     assert base.read_text() == grown.read_text()
