@@ -75,12 +75,30 @@ DISPATCH_COLUMNS = ("dispatch", "batch_dispatches", "dedup_suppressed")
 PCTL_COLUMNS = ("stall_p50_s", "stall_p99_s", "stall_p999_s",
                 "calib_scale", "calibrated_stall_s")
 
+#: the placement/failure-scenario columns — a replay.csv missing them was
+#: produced before placement became a policy (ISSUE 7) and must fail the
+#: gate; only clean-regime rows (no-fault, round-robin, replication 1) are
+#: compared against the baseline, which is recorded in that regime
+PLACEMENT_COLUMNS = ("placement", "replication", "scenario", "failovers")
+
 #: p99 stall gating: fail when the fresh tail exceeds the baseline by more
 #: than ``rel`` (fractional) with an absolute floor of ``abs`` seconds —
 #: the floor keeps sub-millisecond tails from tripping on exact-arithmetic
 #: jitter introduced by intentional think/overhead constant tweaks
 P99_REL_TOLERANCE = 0.10
 P99_ABS_FLOOR_S = 5e-4
+
+
+def _clean_regime(r: dict) -> bool:
+    """Only the clean regime is gated: a file carrying fault-scenario or
+    exotic-placement rows (bench_placement sweeps) must not let those rows
+    shadow the no-fault/round-robin cells the baseline pins down.  Files
+    from before the placement columns existed read as all-clean."""
+    return (
+        (r.get("scenario") or "no-fault") == "no-fault"
+        and (r.get("placement") or "round-robin") == "round-robin"
+        and (r.get("replication") or "1") == "1"
+    )
 
 
 def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
@@ -93,6 +111,7 @@ def _load(path: str) -> tuple[dict[Key, dict], list[str]]:
             (r["app"], r["workload"], r["predictor"], r["cache_capacity"],
              r.get("policy") or "lru", r.get("dispatch") or "per-oid"): r
             for r in rows
+            if _clean_regime(r)
         },
         fields,
     )
@@ -125,6 +144,12 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02,
     if missing_cols:
         failures.append(
             f"{current_path}: stall-percentile columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
+    missing_cols = [c for c in PLACEMENT_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: placement/scenario columns missing from header: "
             f"{', '.join(missing_cols)}"
         )
     for key in sorted(baseline):

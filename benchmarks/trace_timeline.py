@@ -5,10 +5,16 @@ Runs the same app on both clocks and exports both timelines:
 
   * **wall** — a live ``ObjectStore`` run (sleeping latency model, span
     tracing on) of the first requested app, exported to
-    ``<out>/<app>_wall.trace.json``;
+    ``<out>/<app>_wall.trace.json``; a plan-driven ``WeightStreamer`` run
+    rides along in the same file as its own producer track (pid 9000,
+    "weight-streamer"), so store lanes and stream fetch lanes share one
+    Perfetto timeline;
   * **virtual** — a deterministic ``VirtualReplay`` of every requested
     app's recorded trace under static-capre, exported to
     ``<out>/<app>_replay.trace.json``.
+
+Both exports carry the tracer's instant markers (demand-steal, failover,
+service-down) on their service's track.
 
 Every export is validated in-process (span lifecycle invariants, Chrome
 trace schema, >= 4 lifecycle phases per loaded prefetch span) — a
@@ -75,9 +81,40 @@ def _hist_row(run: str, clock: str, metric: str, labels: dict, snap: dict) -> di
     }
 
 
+def stream_run() -> tuple[list, list[str]]:
+    """A small plan-driven WeightStreamer run with its own tracer; returns
+    (spans, problems).  Its spans carry ``service=STREAM_PID`` so they merge
+    into the store's timeline as a separate producer track."""
+    import numpy as np
+
+    from repro.core.access_plan import AccessRecord, PrefetchPlan
+    from repro.runtime.prefetch import HostParamStore, WeightStreamer
+
+    n = 8
+    params = {f"layer{i}": {"w": np.zeros((128, 128), np.float32)} for i in range(n)}
+    plan = PrefetchPlan(records=[
+        AccessRecord(path=f"layer{i}.w", first_use=i, nbytes=128 * 128 * 4,
+                     shape=(128, 128))
+        for i in range(n)
+    ])
+    store = HostParamStore(params, bandwidth_gbps=8.0, base_latency_s=200e-6)
+    tracer = Tracer(session="stream")
+    ws = WeightStreamer(store, plan=plan, mode="capre", k_ahead=2, tracer=tracer)
+    ws.run_plan(compute_s_per_group=500e-6)
+    ws.close()
+    spans = tracer.spans()
+    problems = [f"stream/wall: {p}" for p in check_span_invariants(spans)]
+    if not any(s.kind == "prefetch" and s.load_done_t is not None for s in spans):
+        problems.append("stream/wall: no loaded stream prefetch spans")
+    return spans, problems
+
+
 def wall_run(app: str, out_dir: str, hist_rows: list) -> tuple[str, list[str]]:
     """One live store run with full span tracing; returns (trace path,
-    validation problems)."""
+    validation problems).  A WeightStreamer run is merged into the same
+    trace file as its own producer track."""
+    from repro.runtime.prefetch import STREAM_PID
+
     wl = _catalog()[app]
     client = POSClient(n_services=4, latency=BENCH_LATENCY)
     obs = Observability(tracing=True)
@@ -93,9 +130,13 @@ def wall_run(app: str, out_dir: str, hist_rows: list) -> tuple[str, list[str]]:
     obs.tracer.drop_active("run-end")
     spans = obs.tracer.spans()
     problems = _validate(f"{app}/wall", spans, clock="wall")
+    stream_spans, stream_problems = stream_run()
+    problems += stream_problems
     path = os.path.join(out_dir, f"{app}_wall.trace.json")
     if not problems:
-        write_chrome_trace(path, spans, clock="wall")
+        write_chrome_trace(path, spans + stream_spans, clock="wall",
+                           instants=obs.tracer.instants(),
+                           process_names={STREAM_PID: "weight-streamer"})
     snap = obs.registry.snapshot()
     for hists in snap["histograms"].values():
         for h in hists:
@@ -120,7 +161,8 @@ def virtual_run(app: str, out_dir: str, hist_rows: list,
     problems = _validate(f"{app}/virtual", spans, clock="virtual")
     path = os.path.join(out_dir, f"{app}_replay.trace.json")
     if not problems:
-        write_chrome_trace(path, spans, clock="virtual")
+        write_chrome_trace(path, spans, clock="virtual",
+                           instants=tracer.instants())
     hist_rows.append(_hist_row(f"{app}/virtual", "virtual", "stall_s", {"app": app}, {
         "count": result.evaluated, "sum": result.stall_seconds,
         "p50": result.stall_p50_s, "p99": result.stall_p99_s,

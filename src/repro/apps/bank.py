@@ -198,12 +198,16 @@ def populate_bank_store(store, n_transactions: int = 100, n_companies: int = 3, 
     transactions = []
     for i in range(n_transactions):
         comp = rng.choice(companies)
-        cust = store.put("Customer", {"company": comp, "name": f"cust{i}"})
-        acct = store.put("Account", {"cust": cust, "balance": float(i)})
-        emp = store.put("Employee", {"dept": rng.choice(depts), "name": f"emp{i}"})
+        # each transaction's navigation closure (tx -> account -> customer,
+        # tx -> employee) is one locality group: a locality-aware placement
+        # co-locates the whole hop chain on one Data Service
+        cust = store.put("Customer", {"company": comp, "name": f"cust{i}"}, group=f"tx{i}")
+        acct = store.put("Account", {"cust": cust, "balance": float(i)}, group=f"tx{i}")
+        emp = store.put("Employee", {"dept": rng.choice(depts), "name": f"emp{i}"}, group=f"tx{i}")
         tx = store.put(
             "Transaction",
             {"account": acct, "emp": emp, "type": rng.choice(ttypes), "amount": float(i)},
+            group=f"tx{i}",
         )
         transactions.append(tx)
     root = store.put("BankManagement", {"transactions": transactions, "manager": manager})

@@ -135,12 +135,16 @@ def populate_kmeans(store, n_vectors: int = 800, n_collections: int = 4, dims: i
     rng = random.Random(seed)
     per = n_vectors // n_collections
     colls = []
-    for _ in range(n_collections):
+    for ci in range(n_collections):
+        # one locality group per collection: the iteration scans a whole
+        # collection before moving on, so co-locating it keeps each scan
+        # on a single Data Service
         vecs = [
-            store.put("Vector", {"dims": [rng.random() for _ in range(dims)]})
+            store.put("Vector", {"dims": [rng.random() for _ in range(dims)]},
+                      group=f"coll{ci}")
             for _ in range(per)
         ]
-        colls.append(store.put("VectorCollection", {"vectors": vecs}))
+        colls.append(store.put("VectorCollection", {"vectors": vecs}, group=f"coll{ci}"))
     return store.put("KMeansJob", {"collections": colls, "k": 4, "iters": 3})
 
 

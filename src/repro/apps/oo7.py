@@ -268,10 +268,15 @@ def populate_oo7(store, size: str = "small", seed: int = 7) -> int:
     rng = random.Random(seed)
 
     def make_composite(idx: int) -> int:
-        doc = store.put("Document", {"title": f"doc{idx}", "text": "x" * 16})
+        # a composite part's traversal closure (parts + connections + doc)
+        # is one locality group — T1/T6 walk it in full, so a locality-aware
+        # placement keeps the whole subtree on one Data Service
+        grp = f"cp{idx}"
+        doc = store.put("Document", {"title": f"doc{idx}", "text": "x" * 16}, group=grp)
         n = cfg["atoms_per_comp"]
         atoms = [
-            store.put("AtomicPart", {"x": float(i), "y": float(i) * 2, "docId": idx, "to": [], "partOf": None})
+            store.put("AtomicPart", {"x": float(i), "y": float(i) * 2, "docId": idx, "to": [], "partOf": None},
+                      group=grp)
             for i in range(n)
         ]
         # connect the parts in a ring plus a few random chords (the OO7
@@ -281,13 +286,15 @@ def populate_oo7(store, size: str = "small", seed: int = 7) -> int:
             while len(targets) < 3:
                 targets.add(atoms[rng.randrange(n)])
             conns = [
-                store.put("Connection", {"toPart": t, "length": rng.random(), "ctype": "c"})
+                store.put("Connection", {"toPart": t, "length": rng.random(), "ctype": "c"},
+                          group=grp)
                 for t in targets
             ]
             store.peek(a).fields["to"] = conns
         cp = store.put(
             "CompositePart",
             {"rootPart": atoms[0], "documentation": doc, "parts": atoms, "buildDate": idx},
+            group=grp,
         )
         for a in atoms:
             store.peek(a).fields["partOf"] = cp

@@ -183,7 +183,10 @@ def populate_pga(store, n_vertices: int = 300, out_degree: int = 4, seed: int = 
     import random
 
     rng = random.Random(seed)
-    vertices = [store.put("Vertex", {"vid": i, "edges": []}) for i in range(n_vertices)]
+    # a vertex and its out-edges form one locality group: relaxing a vertex
+    # touches all of them, so co-location spares the per-edge remote hops
+    vertices = [store.put("Vertex", {"vid": i, "edges": []}, group=f"v{i}")
+                for i in range(n_vertices)]
     for i, v in enumerate(vertices):
         edges = []
         # a ring edge keeps the graph connected; chords add density
@@ -191,7 +194,8 @@ def populate_pga(store, n_vertices: int = 300, out_degree: int = 4, seed: int = 
         while len(targets) < out_degree:
             targets.add(vertices[rng.randrange(n_vertices)])
         for t in targets:
-            edges.append(store.put("WeightedEdge", {"toVertex": t, "weight": rng.random()}))
+            edges.append(store.put("WeightedEdge", {"toVertex": t, "weight": rng.random()},
+                                   group=f"v{i}"))
         store.peek(v).fields["edges"] = edges
     g = store.put("WeightedDirectedGraph", {"vertices": vertices, "name": "g"})
     return g, vertices[0]

@@ -115,16 +115,21 @@ def populate_wordcount(
     for ci in range(n_collections):
         texts = []
         for ti in range(texts_per_collection):
+            # one locality group per text: the run scans each text's chunk
+            # list end to end, so its closure belongs on one Data Service
+            grp = f"t{ci}.{ti}"
             chunks = [
                 store.put(
                     "Chunk",
                     {"words": [rng.choice(_WORDS) for _ in range(words_per_chunk)]},
+                    group=grp,
                 )
                 for _ in range(chunks_per_text)
             ]
-            st = store.put("TextStats", {"lineCount": chunks_per_text, "charCount": 0})
+            st = store.put("TextStats", {"lineCount": chunks_per_text, "charCount": 0},
+                           group=grp)
             texts.append(
-                store.put("Text", {"chunks": chunks, "stats": st, "name": f"t{ci}.{ti}"})
+                store.put("Text", {"chunks": chunks, "stats": st, "name": grp}, group=grp)
             )
         collections.append(store.put("TextCollection", {"texts": texts}))
     return store.put("WCJob", {"collections": collections})

@@ -45,16 +45,25 @@ def _us(t: float, t0: float) -> float:
 
 
 def chrome_trace(spans: Sequence[PrefetchSpan], *, clock: str = "wall",
-                 counters: bool = True) -> dict:
+                 counters: bool = True,
+                 instants: Sequence[dict] = (),
+                 process_names: Optional[dict] = None) -> dict:
     """Serialize spans to a Chrome-trace JSON object.
 
     ``clock`` is recorded in trace metadata ("wall" | "virtual"); virtual
     traces already start near 0, wall traces are normalized to the earliest
     timestamp so Perfetto doesn't render hours of empty lead-in.
+
+    ``instants`` are ``Tracer.instants()`` markers (failover / crash /
+    demand-steal) rendered as process-scoped instant events on their
+    service's track.  ``process_names`` overrides per-pid track labels —
+    how non-store producers (e.g. the weight streamer at its own pid)
+    share one timeline with the Data Services.
     """
     ts_all = [t for s in spans
               for t in (s.predicted_t, s.load_done_t, s.outcome_t)
               if t is not None]
+    ts_all.extend(i["t"] for i in instants)
     t0 = min(ts_all) if ts_all else 0.0
     if clock == "virtual":
         t0 = 0.0
@@ -105,14 +114,29 @@ def chrome_trace(spans: Sequence[PrefetchSpan], *, clock: str = "wall",
                          "re_predicted": span.re_predicted},
             })
 
+    for marker in instants:
+        pid = max(int(marker.get("service", -1)), 0)
+        services.add(pid)
+        events.append({
+            "name": marker["name"],
+            "cat": "fault",
+            "ph": "i",
+            "s": "p",  # process-scoped: the whole service track flags it
+            "ts": _us(marker["t"], t0),
+            "pid": pid,
+            "tid": 0,
+            "args": dict(marker.get("args", {})),
+        })
+
     if counters:
         events.extend(_occupancy_counters(spans, t0))
 
     # metadata: readable process/thread names in the Perfetto track list
+    names = process_names or {}
     for pid in sorted(services):
         events.append({"name": "process_name", "ph": "M", "ts": 0.0,
                        "pid": pid, "tid": 0,
-                       "args": {"name": f"data-service {pid}"}})
+                       "args": {"name": names.get(pid, f"data-service {pid}")}})
     for pid, tid in sorted(lanes):
         label = "demand path" if tid == _DEMAND_TID else f"lane {tid}"
         events.append({"name": "thread_name", "ph": "M", "ts": 0.0,
@@ -212,10 +236,13 @@ def full_lifecycle_phase_counts(obj) -> dict[int, int]:
 
 
 def write_chrome_trace(path, spans: Sequence[PrefetchSpan], *,
-                       clock: str = "wall", counters: bool = True) -> dict:
+                       clock: str = "wall", counters: bool = True,
+                       instants: Sequence[dict] = (),
+                       process_names: Optional[dict] = None) -> dict:
     """Export + validate + write in one step; raises on schema violations
     so a benchmark can't silently publish a broken timeline."""
-    trace = chrome_trace(spans, clock=clock, counters=counters)
+    trace = chrome_trace(spans, clock=clock, counters=counters,
+                         instants=instants, process_names=process_names)
     problems = validate_chrome_trace(trace)
     if problems:
         raise ValueError(f"invalid chrome trace: {problems[:5]}")

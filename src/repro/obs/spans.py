@@ -110,6 +110,10 @@ class Tracer:
         self._active: dict[int, PrefetchSpan] = {}
         self._done: list[PrefetchSpan] = []
         self._batch_ids = 0
+        # point-in-time markers outside any span's lifecycle (failover,
+        # service crash/down, demand steal, straggler flags): rendered as
+        # Perfetto instant events on the service's track
+        self._instants: list[dict] = []
         self.events = 0
 
     # -- internals -----------------------------------------------------------
@@ -275,6 +279,19 @@ class Tracer:
                 self._done.append(miss)
         self._charge(t0)
 
+    def instant(self, name: str, service: int = -1,
+                t: Optional[float] = None, **args) -> None:
+        """Record a point-in-time marker (retry/failover/crash/steal
+        instants — events that are not a phase of any one span's life)."""
+        t0 = time.perf_counter()
+        ts = self.clock() if t is None else t
+        with self._lock:
+            self.events += 1
+            self._instants.append(
+                {"name": name, "service": service, "t": ts, "args": args}
+            )
+        self._charge(t0)
+
     def evicted(self, oid: int, t: Optional[float] = None) -> None:
         t0 = time.perf_counter()
         ts = self.clock() if t is None else t
@@ -317,6 +334,10 @@ class Tracer:
         with self._lock:
             return list(self._done) + list(self._active.values())
 
+    def instants(self) -> list[dict]:
+        with self._lock:
+            return list(self._instants)
+
     def active_count(self) -> int:
         with self._lock:
             return len(self._active)
@@ -334,6 +355,7 @@ class Tracer:
             self._active.clear()
             self._done.clear()
             self._batch_ids = 0
+            self._instants.clear()
             self.events = 0
 
 

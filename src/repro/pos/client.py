@@ -176,12 +176,14 @@ class POSClient:
     """Convenience facade: one store + one Logic Module."""
 
     def __init__(self, n_services: int = 4, latency=None, cache_capacity: int = 0,
-                 cache_policy: str = "lru", shared_budget: bool = False):
+                 cache_policy: str = "lru", shared_budget: bool = False,
+                 placement: str = "round-robin", replication: int = 1):
         from .latency import ZERO
 
         self.store = ObjectStore(
             n_services=n_services, latency=latency or ZERO, cache_capacity=cache_capacity,
             cache_policy=cache_policy, shared_budget=shared_budget,
+            placement=placement, replication=replication,
         )
         self.logic_module = LogicModule()
 

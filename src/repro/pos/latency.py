@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
+from typing import Optional
 
 _MIN_SLEEP = 50e-6
 
@@ -33,10 +34,41 @@ class LatencyModel:
     # per-oid dispatcher issues its i-th load ~i*dispatch_overhead late,
     # while a batched dispatcher pays it once per Data-Service batch
     dispatch_overhead: float = 0.0
+    # per-service disk-time multipliers (straggler regimes): service i's
+    # disk_load and write_back scale by service_scales[i]; services past the
+    # tuple's end (or an empty tuple — the default) run at 1.0.  This is how
+    # a slow/degraded Data Service enters the cost model without touching
+    # the cluster-wide constants.
+    service_scales: tuple[float, ...] = ()
+    # what a demand access pays to notice a dead service and re-route to a
+    # replica (failover detection + retry); only charged on actual failover
+    failover_detect: float = 0.0
 
     def sleep(self, seconds: float) -> None:
         if seconds >= _MIN_SLEEP:
             time.sleep(seconds)
+
+    def scale_for(self, ds_id: int) -> float:
+        if 0 <= ds_id < len(self.service_scales):
+            return self.service_scales[ds_id]
+        return 1.0
+
+    def disk_load_for(self, ds_id: int) -> float:
+        return self.disk_load * self.scale_for(ds_id)
+
+    def write_back_for(self, ds_id: int) -> float:
+        return self.write_back * self.scale_for(ds_id)
+
+    def with_stragglers(self, scales: dict[int, float]) -> "LatencyModel":
+        """A copy where service ``i`` runs ``scales[i]`` times slower on
+        disk (1.0 elsewhere) — the per-service slow/straggler regime."""
+        from dataclasses import replace
+
+        width = max(scales) + 1 if scales else 0
+        return replace(
+            self,
+            service_scales=tuple(scales.get(i, 1.0) for i in range(width)),
+        )
 
     @property
     def is_zero(self) -> bool:
@@ -44,8 +76,9 @@ class LatencyModel:
 
     def scaled(self, scale: float) -> "LatencyModel":
         """A copy with every *time* constant multiplied by ``scale`` (slot
-        counts untouched) — how the fitted wall-vs-virtual calibration
-        factors (``predict.calibration``) are applied to a replay model."""
+        counts and the per-service straggler multipliers untouched) — how
+        the fitted wall-vs-virtual calibration factors
+        (``predict.calibration``) are applied to a replay model."""
         from dataclasses import replace
 
         return replace(
@@ -55,6 +88,7 @@ class LatencyModel:
             write_back=self.write_back * scale,
             think=self.think * scale,
             dispatch_overhead=self.dispatch_overhead * scale,
+            failover_detect=self.failover_detect * scale,
         )
 
 
@@ -81,8 +115,12 @@ class VirtualDisk:
     (including queueing behind other loads on the same service — where
     over-eager predictors congest their own prefetches)."""
 
-    def __init__(self, latency: LatencyModel):
+    def __init__(self, latency: LatencyModel, scale: float = 1.0):
         self.latency = latency
+        # per-service straggler multiplier (1.0 = nominal): scales this
+        # disk's service times without touching the shared LatencyModel
+        self._disk_load = latency.disk_load * scale
+        self._write_back = latency.write_back * scale
         self._slots = [0.0] * max(1, latency.parallel_per_ds)
         self.loads = 0
         self.write_backs = 0
@@ -103,7 +141,7 @@ class VirtualDisk:
         ``(start, done)``.  The load takes the earliest-free slot: it starts
         at ``max(t, slot_free)`` and completes ``disk_load`` later."""
         self.loads += 1
-        return self._occupy(t, self.latency.disk_load)
+        return self._occupy(t, self._disk_load)
 
     def schedule_batch(self, t: float, n: int) -> list[tuple[float, float]]:
         """Schedule ``n`` disk loads, all requested at virtual time ``t`` —
@@ -120,7 +158,7 @@ class VirtualDisk:
         application's critical path, but it delays whatever loads queue
         behind it, which is how the replay charges the write path."""
         self.write_backs += 1
-        return self._occupy(t, self.latency.write_back)
+        return self._occupy(t, self._write_back)
 
 
 # Constants used by the offline replay engine: the paper's HDD regime, where
@@ -135,3 +173,55 @@ REPLAY = LatencyModel(
     disk_load=2e-3, remote_hop=120e-6, write_back=4e-3, think=250e-6, parallel_per_ds=2,
     dispatch_overhead=50e-6,
 )
+
+
+# ---------------------------------------------------------------------------
+# failure scenarios — the regimes the replay engine and bench_placement sweep
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FailureScenario:
+    """One failure regime for a replay/bench run.
+
+    ``straggler`` is ``((ds_id, disk_scale), ...)``: those services' disk
+    times multiply by the scale (the slow-service regime).  ``crash_service``
+    (with ``crash_at`` in virtual seconds) kills one service mid-run: its
+    cache and in-flight loads are lost, claimed-but-unlanded prefetches
+    re-dispatch to a surviving replica after ``failover_delay``, and demand
+    reads route around the corpse (replication >= 2 required — with a single
+    replica the data is simply gone and the replay raises)."""
+
+    name: str = "no-fault"
+    straggler: tuple[tuple[int, float], ...] = ()
+    crash_service: Optional[int] = None
+    crash_at: float = float("inf")
+    failover_delay: float = 2e-3
+
+    @property
+    def is_fault(self) -> bool:
+        return bool(self.straggler) or self.crash_service is not None
+
+    def straggler_scales(self) -> dict[int, float]:
+        return dict(self.straggler)
+
+
+#: scenario vocabulary bench_placement / evaluate sweep by name
+SCENARIO_NAMES = ("no-fault", "straggler", "crash")
+
+
+def make_scenario(name: str, end_t: float = 0.0, ds_id: int = 0,
+                  straggler_scale: float = 8.0,
+                  crash_frac: float = 0.25) -> FailureScenario:
+    """Resolve a named regime: ``straggler`` makes ``ds_id`` run
+    ``straggler_scale`` times slower on disk; ``crash`` kills ``ds_id`` at
+    ``crash_frac`` of the no-fault baseline's end time ``end_t`` (mid-run,
+    so in-flight prefetch batches are caught on the dead service)."""
+    if name == "no-fault":
+        return FailureScenario()
+    if name == "straggler":
+        return FailureScenario(name=name, straggler=((ds_id, straggler_scale),))
+    if name == "crash":
+        return FailureScenario(name=name, crash_service=ds_id,
+                               crash_at=end_t * crash_frac)
+    raise KeyError(f"unknown failure scenario {name!r}; expected one of {SCENARIO_NAMES}")

@@ -11,8 +11,14 @@ Semantics mirrored from dataClay:
     loads the object where it is stored* — it removes the disk load from the
     application's critical path but not the execution redirection;
   * stored collections are automatically distributed among the available
-    Data Services (round-robin), which is what makes parallel prefetching
-    profitable.
+    Data Services, which is what makes parallel prefetching profitable —
+    *how* they distribute is a pluggable placement policy (``pos.placement``:
+    round-robin, consistent-hash, locality-aware subtree co-location);
+  * objects may be stored on ``replication`` Data Services (primary +
+    ring successors); demand reads pick a replica with load-aware routing
+    (prefer the replica that already holds the line, else least-queued),
+    and a crashed service fails over to the survivors: demand reads
+    re-route, claimed-but-unlanded prefetch batches re-dispatch.
 """
 
 from __future__ import annotations
@@ -25,7 +31,31 @@ from typing import Any, Iterable, Optional
 
 from .eviction import DEFAULT_POLICY, SharedBudget, make_policy
 from .latency import LatencyModel, ZERO
+from .placement import DEFAULT_PLACEMENT, make_placement
+from .placement import spread as placement_spread
 from .trace import TraceEvent, access_event, write_event, method_entry_event
+
+
+class ServiceCrashed(RuntimeError):
+    """An operation landed on a crashed Data Service.  The store's demand
+    path catches this, marks the service down and fails over to a replica;
+    batch lanes catch it and re-dispatch their unlanded oids."""
+
+    def __init__(self, ds_id: int):
+        super().__init__(f"data service {ds_id} crashed")
+        self.ds_id = ds_id
+
+
+class NoReplicaAvailable(RuntimeError):
+    """Every replica of an object is down — with replication factor 1 a
+    single crash makes its objects unreachable (the failure replication
+    exists to mask)."""
+
+    def __init__(self, oid: int, replicas):
+        super().__init__(
+            f"no alive replica for oid {oid} (replicas {list(replicas)})"
+        )
+        self.oid = oid
 
 
 @dataclass
@@ -54,6 +84,9 @@ class DataService:
                  policy: str = DEFAULT_POLICY, budget: Optional[SharedBudget] = None):
         self.ds_id = ds_id
         self.latency = latency
+        # fail-stop flag: crash() clears it; a dead service raises
+        # ServiceCrashed from every load/claim so callers fail over
+        self.alive = True
         self.disk: dict[int, PersistentObject] = {}
         # bounded memory cache (capacity 0 = unbounded, the paper's regime);
         # eviction order is delegated to a pluggable policy (pos.eviction) —
@@ -97,6 +130,7 @@ class DataService:
         self.prefetch_loads = 0  # disk loads performed by prefetch work
         self.batch_dispatches = 0  # prefetch tasks submitted for this service
         self.dedup_suppressed = 0  # oids suppressed pre-submission (cached/in-flight/dup)
+        self.demand_steals = 0  # lane-claimed oids a demand access took over
         # set by the owning ObjectStore so flush/eviction events land on
         # the shared StoreMetrics too (None for a standalone DataService)
         self._owner: Optional["ObjectStore"] = None
@@ -152,8 +186,10 @@ class DataService:
     def _flush(self, oid: int) -> None:
         """Write a dirty object back to disk (occupies a disk slot for
         ``write_back`` seconds — the deferred cost of the write path)."""
+        if not self.alive:
+            return  # crashed: the in-memory update is simply lost
         with self._slots:
-            self.latency.sleep(self.latency.write_back)
+            self.latency.sleep(self.latency.write_back_for(self.ds_id))
         self.flushed_writes += 1
         if self._owner is not None:
             self._owner._note_flush()
@@ -170,6 +206,7 @@ class DataService:
         self.prefetch_loads = 0
         self.batch_dispatches = 0
         self.dedup_suppressed = 0
+        self.demand_steals = 0
         self.policy.protected_evictions = 0
 
     def is_cached(self, oid: int) -> bool:
@@ -205,10 +242,19 @@ class DataService:
         (False: cached, or coalesced onto an in-flight load).  ``prefetch``
         marks the touch as prefetch-path for the eviction policy (a
         prefetch-aware policy must not count it as the application *using*
-        the line)."""
+        the line).  Raises :class:`ServiceCrashed` on a dead service.
+
+        Demand steal: if the oid is claimed by a batch lane that has not
+        started loading it (``lane_pending`` on the in-flight event), a
+        demand access takes the load over instead of waiting for the lane to
+        reach it — the lane skips stolen oids when it finally gets a slot.
+        The same event is reused, so coalesced waiters wake either way."""
         while True:
             flushes: list[tuple[DataService, int]] = []
+            stole = False
             with self._cache_lock:
+                if not self.alive:
+                    raise ServiceCrashed(self.ds_id)
                 if oid in self.cache:
                     flushes = self._touch(oid, prefetch=prefetch)
                     hit = True
@@ -219,8 +265,18 @@ class DataService:
                         ev = threading.Event()
                         self._inflight[oid] = ev
                         owner = True
+                    elif not prefetch and getattr(ev, "lane_pending", False):
+                        ev.lane_pending = False
+                        ev.stolen = True
+                        self.demand_steals += 1
+                        stole = True
+                        owner = True
                     else:
                         owner = False
+            if stole:
+                tr = self._tracer
+                if tr is not None:
+                    tr.instant("demand-steal", service=self.ds_id, oid=oid)
             if hit:
                 for vds, victim in flushes:
                     # flushing sleeps on a disk slot: never under the lock
@@ -249,8 +305,12 @@ class DataService:
             else:
                 slot = self._demand_slot()
             with slot:
-                self.latency.sleep(self.latency.disk_load)
+                if not self.alive:
+                    raise ServiceCrashed(self.ds_id)
+                self.latency.sleep(self.latency.disk_load_for(self.ds_id))
             with self._cache_lock:
+                if not self.alive:
+                    raise ServiceCrashed(self.ds_id)
                 flushes = self._touch(oid, prefetch=prefetch)
         finally:
             with self._cache_lock:
@@ -258,7 +318,37 @@ class DataService:
             ev.set()
         for vds, victim in flushes:
             vds._flush(victim)
+        self._beat()
         return True
+
+    def _beat(self) -> None:
+        """Heartbeat + per-load service-time sample for the fault detector
+        (if the owning store has one attached): each landed load proves the
+        service alive and feeds the straggler detector's timing baseline."""
+        owner = self._owner
+        if owner is not None and owner.fault is not None:
+            owner.fault.beat(self.ds_id, self.latency.disk_load_for(self.ds_id))
+
+    def crash(self) -> None:
+        """Fail-stop this service: the memory cache and every in-flight
+        load are lost (waiters wake and re-check — on a dead service the
+        re-check raises, and the store's demand path fails over).  Disk
+        contents are left in place: replicas on other services still share
+        the same :class:`PersistentObject` records."""
+        with self._cache_lock:
+            self.alive = False
+            for oid in self.cache:
+                if self.budget is not None:
+                    self.budget.note_remove(oid)
+                else:
+                    self.policy.note_remove(oid)
+            self.cache.clear()
+            for ev in self._inflight.values():
+                ev.set()
+            self._inflight.clear()
+            self.dirty.clear()
+            self._demand_waiting = 0
+            self._demand_clear.set()
 
     # -- batched prefetch dispatch ------------------------------------------
 
@@ -275,6 +365,8 @@ class DataService:
         todo: list[int] = []
         claimed: set[int] = set()
         with self._cache_lock:
+            if not self.alive:
+                raise ServiceCrashed(self.ds_id)
             for oid in oids:
                 self.prefetch_requests += 1
                 if oid in claimed:
@@ -322,10 +414,20 @@ class DataService:
         chunk under one lock.  Oids that became resident (or in flight
         elsewhere) since the batch was deduped are skipped at claim time.
         With a tracer attached, each chunk records its slot wait vs disk
-        service split (chunk-granular: the chunk shares one slot hold)."""
+        service split (chunk-granular: the chunk shares one slot hold).
+
+        Claimed-but-unstarted oids are *stealable*: a demand access for one
+        of them flips the event's ``stolen`` flag and performs the load
+        itself; this lane drops those from the chunk once it holds a slot
+        (the event now belongs to the stealer).  If the service crashes
+        mid-lane, every unlanded oid is handed back to the owning store for
+        re-dispatch on a surviving replica."""
         tr = self._tracer
         pending = list(oids)
         while pending:
+            if not self.alive:
+                self._abort_lane(pending)
+                return
             # the lane re-acquires the slot back-to-back; without this
             # yield a waiting demand load would lose every race for it
             self._yield_to_demand()
@@ -338,6 +440,7 @@ class DataService:
                         self.policy.note_access(oid, prefetch=prefetch)
                     elif oid not in self._inflight:  # else: another loader owns it
                         ev = threading.Event()
+                        ev.lane_pending = True  # steal window open
                         self._inflight[oid] = ev
                         chunk.append((oid, ev))
             if not chunk:
@@ -346,15 +449,39 @@ class DataService:
             flushes: list[tuple[DataService, int]] = []
             try:
                 with self._slots:
+                    with self._cache_lock:
+                        # steal handshake: demand took these over while the
+                        # chunk queued for a slot — their events are now the
+                        # stealers' to complete; load only the survivors
+                        chunk = [(oid, ev) for oid, ev in chunk
+                                 if not getattr(ev, "stolen", False)]
+                        for _oid, ev in chunk:
+                            ev.lane_pending = False
+                        crashed = not self.alive
+                    if crashed:
+                        raise ServiceCrashed(self.ds_id)
+                    if not chunk:
+                        continue
                     t_s = time.perf_counter() if tr is not None else 0.0
                     # k sequential loads pipelined on one disk arm
-                    self.latency.sleep(self.latency.disk_load * len(chunk))
+                    self.latency.sleep(
+                        self.latency.disk_load_for(self.ds_id) * len(chunk))
                     t_d = time.perf_counter() if tr is not None else 0.0
                 with self._cache_lock:
+                    if not self.alive:
+                        raise ServiceCrashed(self.ds_id)
                     for oid, _ev in chunk:
                         flushes.extend(self._touch(oid, prefetch=prefetch))
                         self._inflight.pop(oid, None)
                         self.prefetch_loads += 1
+            except ServiceCrashed:
+                with self._cache_lock:
+                    for oid, _ev in chunk:
+                        self._inflight.pop(oid, None)
+                for _oid, ev in chunk:
+                    ev.set()
+                self._abort_lane([oid for oid, _ev in chunk] + pending)
+                return
             except BaseException:
                 with self._cache_lock:
                     for oid, _ev in chunk:
@@ -370,6 +497,17 @@ class DataService:
                           t_q, t_s, t_d)
             for vds, victim in flushes:
                 vds._flush(victim)
+            self._beat()
+
+    def _abort_lane(self, oids: list[int]) -> None:
+        """This service died mid-batch: hand every claimed-but-unlanded and
+        still-pending oid back to the store, which re-dispatches them to a
+        surviving replica (a no-op for a standalone service or when no
+        replica is left — the demand path then eats the miss)."""
+        if not oids or self._owner is None:
+            return
+        self._owner._note_service_down(self.ds_id)
+        self._owner._failover_redispatch(self.ds_id, oids)
 
     def write(self, oid: int) -> bool:
         """Write-allocate + write-back: ensure the object is in memory (a
@@ -430,6 +568,7 @@ PREFETCH_COUNTERS = (
     "prefetch_loads",
     "batch_dispatches",
     "dedup_suppressed",
+    "demand_steals",
 )
 
 
@@ -448,6 +587,9 @@ class StoreMetrics:
     write_hits: int = 0  # writes that found the object already in memory
     dirty_evictions: int = 0  # evictions that had to flush a dirty object
     flushed_writes: int = 0  # write-backs actually performed (evict + drop)
+    failovers: int = 0  # demand retries / batch re-dispatches off a dead service
+    services_crashed: int = 0  # crash_service invocations (fault injection)
+    stragglers_flagged: int = 0  # services the straggler detector deprioritized
 
     def snapshot(self) -> dict[str, int]:
         return dict(self.__dict__)
@@ -467,7 +609,8 @@ class ObjectStore:
 
     def __init__(self, n_services: int = 4, latency: LatencyModel = ZERO,
                  cache_capacity: int = 0, cache_policy: str = DEFAULT_POLICY,
-                 shared_budget: bool = False):
+                 shared_budget: bool = False,
+                 placement: str = DEFAULT_PLACEMENT, replication: int = 1):
         self.latency = latency
         self.cache_policy = cache_policy
         # shared-memory-budget mode: ``cache_capacity`` is one global line
@@ -486,9 +629,24 @@ class ObjectStore:
         ]
         for ds in self.services:
             ds._owner = self
-        self._placement: dict[int, int] = {}  # oid -> ds_id
+        # placement is a policy (pos.placement), the way eviction is: the
+        # policy returns each new object's replica set (primary first)
+        self.placement_name = placement
+        self.replication = max(1, min(replication, n_services))
+        self._placer = make_placement(placement, n_services, self.replication)
+        self._placement: dict[int, tuple[int, ...]] = {}  # oid -> replica set
+        # creation log (oid, cls, group, pinned_ds) — enough to re-place the
+        # whole store under a different policy (rebuild_placement) and to
+        # snapshot/restore placement inputs for the trace cache
+        self._put_log: list[tuple[int, str, Optional[str], Optional[int]]] = []
+        # failure bookkeeping: services routing must avoid (detected dead)
+        # and deprioritize (detector-flagged stragglers).  A crashed-but-
+        # unannounced service stays routable until the error path or the
+        # heartbeat monitor catches it — that window IS the failure model.
+        self._down: set[int] = set()
+        self._slow: set[int] = set()
+        self.fault = None  # optional runtime.fault.StoreFaultDetector
         self._oid_counter = itertools.count(1)
-        self._rr = itertools.count()
         self._metrics_lock = threading.Lock()
         self.metrics = StoreMetrics()
         # accuracy accounting (true/false positives of prefetching) — the
@@ -533,24 +691,119 @@ class ObjectStore:
     def new_oid(self) -> int:
         return next(self._oid_counter)
 
-    def put(self, cls: str, fields: Optional[dict[str, Any]] = None, ds: Optional[int] = None) -> int:
-        """Store a new object; round-robin placement unless pinned."""
+    def put(self, cls: str, fields: Optional[dict[str, Any]] = None,
+            ds: Optional[int] = None, group: Optional[str] = None) -> int:
+        """Store a new object; the placement policy picks its replica set
+        (primary first) unless pinned to ``ds``.  ``group`` is the locality
+        hint — apps tag a collection element's whole subtree with one key so
+        the locality policy co-locates it (other policies ignore it).  With
+        ``replication > 1`` the same record lands on R services: one
+        :class:`PersistentObject` instance shared by all replica disks, so
+        field state is trivially consistent (this is a latency/availability
+        model, not a durability protocol).  Pinned puts do not advance the
+        policy — the legacy contract that keeps pinning side-effect-free."""
         oid = self.new_oid()
         if ds is None:
-            ds = next(self._rr) % len(self.services)
+            reps = self._placer.place(oid, cls, group=group)
+        else:
+            reps = placement_spread(ds, len(self.services), self.replication)
         obj = PersistentObject(oid=oid, cls=cls, fields=fields or {})
-        self.services[ds].disk[oid] = obj
-        self._placement[oid] = ds
+        for r in reps:
+            self.services[r].disk[oid] = obj
+        self._placement[oid] = reps
+        self._put_log.append((oid, cls, group, ds))
         return oid
 
     def service_of(self, oid: int) -> DataService:
-        return self.services[self._placement[oid]]
+        """The object's *primary* Data Service (replica set's first entry —
+        what the virtual-clock replay and placement-agnostic callers use)."""
+        return self.services[self._placement[oid][0]]
+
+    def replicas_of(self, oid: int) -> tuple[int, ...]:
+        return self._placement[oid]
 
     def record(self, oid: int) -> PersistentObject:
+        # any replica works (shared instance); read the primary's disk
         return self.service_of(oid).disk[oid]
 
     def cls_of(self, oid: int) -> str:
         return self.record(oid).cls
+
+    def rebuild_placement(self, placement: str, replication: int = 1) -> None:
+        """Re-place every stored object under a different policy and/or
+        replication factor without re-recording anything: replay the
+        creation log (same order, same group hints, pins respected) through
+        a fresh policy instance.  Determinism of the policies guarantees the
+        result is identical to having created the store this way.  Caches
+        must be cold (use between replays, not mid-run)."""
+        n = len(self.services)
+        records = {oid: self.record(oid) for oid, _cls, _grp, _pin in self._put_log}
+        self.placement_name = placement
+        self.replication = max(1, min(replication, n))
+        self._placer = make_placement(placement, n, self.replication)
+        self._placement.clear()
+        for svc in self.services:
+            svc.disk.clear()
+        for oid, cls, group, pin in self._put_log:
+            if pin is None:
+                reps = self._placer.place(oid, cls, group=group)
+            else:
+                reps = placement_spread(pin, n, self.replication)
+            self._placement[oid] = reps
+            for r in reps:
+                self.services[r].disk[oid] = records[oid]
+
+    # -- replica routing -----------------------------------------------------
+
+    def _pick_replica(self, oid: int, alive: list[int],
+                      reps: tuple[int, ...]) -> DataService:
+        """Load-aware replica choice: prefer a replica that already holds
+        (or is loading) the line — prefetch landed it there — else the
+        least-queued non-straggler; ties break in replica order, primary
+        first.  The racy cache/inflight peeks are deliberate (routing is a
+        hint; correctness lives in load_into_memory)."""
+        for i in alive:
+            ds = self.services[i]
+            if oid in ds.cache or oid in ds._inflight:
+                return ds
+        return self.services[min(
+            alive,
+            key=lambda i: (i in self._slow,
+                           self.services[i]._demand_waiting
+                           + len(self.services[i]._inflight),
+                           reps.index(i)),
+        )]
+
+    def _route_demand(self, oid: int) -> DataService:
+        """Pick the replica a demand access should execute on.  Routing
+        consults *detected* state only (``_down``): a crashed service that
+        nobody has noticed yet still gets traffic — the resulting
+        :class:`ServiceCrashed` is how the error path detects it."""
+        reps = self._placement[oid]
+        if len(reps) == 1:  # replication 1: byte-identical legacy routing
+            if reps[0] in self._down:
+                raise NoReplicaAvailable(oid, reps)
+            return self.services[reps[0]]
+        alive = [i for i in reps if i not in self._down]
+        if not alive:
+            raise NoReplicaAvailable(oid, reps)
+        if len(alive) == 1:
+            return self.services[alive[0]]
+        return self._pick_replica(oid, alive, reps)
+
+    def _route_prefetch(self, oid: int) -> Optional[DataService]:
+        """Like ``_route_demand`` but a prefetch with no reachable replica
+        is silently skipped (None) — the demand path will surface the
+        failure if the object is ever actually needed."""
+        reps = self._placement[oid]
+        if len(reps) == 1:
+            return None if reps[0] in self._down else self.services[reps[0]]
+        alive = [i for i in reps if i not in self._down]
+        if not alive:
+            return None
+        if len(alive) == 1:
+            return self.services[alive[0]]
+        return self._pick_replica(oid, alive, reps)
 
     # -- application-path access -------------------------------------------
 
@@ -571,23 +824,46 @@ class ObjectStore:
         if self.access_listener is not None:
             self.access_listener(oid)
 
-    def app_access(self, ctx: ExecutionContext, oid: int) -> PersistentObject:
-        """Navigate to ``oid`` on the application thread: redirect execution
-        to the owning Data Service if needed, then ensure the object is in
-        that service's memory."""
-        ds = self.service_of(oid)
-        self._redirect(ctx, ds)
+    def _demand_load(self, ctx: Optional[ExecutionContext], oid: int,
+                     write: bool = False) -> tuple[DataService, bool]:
+        """Demand access with failover: route to a replica, redirect
+        execution, load (or write-allocate).  A :class:`ServiceCrashed`
+        marks the service down, charges ``failover_detect``, and retries on
+        a surviving replica — :class:`NoReplicaAvailable` escapes when none
+        is left.  The stall histogram/span covers the WHOLE wait including
+        failed attempts (that is what the application thread experienced)."""
         obs = self.obs
-        if obs is None:
-            did_load = ds.load_into_memory(oid)
-        else:
-            t0 = time.perf_counter()
-            did_load = ds.load_into_memory(oid)
+        t0 = time.perf_counter() if obs is not None else 0.0
+        while True:
+            ds = self._route_demand(oid)
+            self._redirect(ctx, ds)
+            try:
+                did_load = ds.write(oid) if write else ds.load_into_memory(oid)
+                break
+            except ServiceCrashed:
+                self._note_service_down(ds.ds_id)
+                with self._metrics_lock:
+                    self.metrics.failovers += 1
+                tr = obs.tracer if obs is not None else None
+                if tr is not None:
+                    tr.instant("demand-failover", service=ds.ds_id, oid=oid)
+                self.latency.sleep(self.latency.failover_detect)
+        if obs is not None:
             stall = time.perf_counter() - t0
             self._stall_hists[ds.ds_id].record(stall)
             if obs.tracer is not None:
                 obs.tracer.demand(oid, ds.ds_id, t0, stall, did_load,
-                                  self.latency.disk_load)
+                                  self.latency.disk_load_for(ds.ds_id))
+        if self.fault is not None:
+            self.fault.tick()
+        return ds, did_load
+
+    def app_access(self, ctx: ExecutionContext, oid: int) -> PersistentObject:
+        """Navigate to ``oid`` on the application thread: redirect execution
+        to a replica holding the object (load-aware choice under
+        replication), then ensure the object is in that service's memory —
+        failing over to another replica if the service turns out dead."""
+        ds, did_load = self._demand_load(ctx, oid)
         with self._metrics_lock:
             self.metrics.app_loads += 1
             if did_load:
@@ -609,19 +885,7 @@ class ObjectStore:
         and the access is visible to tracing, ``accessed_oids`` and the
         listeners — previously all of this was bypassed and mutating
         workloads undercounted demand."""
-        ds = self.service_of(oid)
-        self._redirect(ctx, ds)
-        obs = self.obs
-        if obs is None:
-            did_load = ds.write(oid)
-        else:
-            t0 = time.perf_counter()
-            did_load = ds.write(oid)
-            stall = time.perf_counter() - t0
-            self._stall_hists[ds.ds_id].record(stall)
-            if obs.tracer is not None:
-                obs.tracer.demand(oid, ds.ds_id, t0, stall, did_load,
-                                  self.latency.disk_load)
+        ds, did_load = self._demand_load(ctx, oid, write=True)
         with self._metrics_lock:
             self.metrics.writes += 1
             if did_load:
@@ -660,14 +924,23 @@ class ObjectStore:
         is stored').  This is the legacy one-task-per-oid dispatch target
         (``dispatch="per-oid"``); each call was one executor submission, so
         it also counts one ``batch_dispatches``."""
-        ds = self.service_of(oid)
+        with self._prefetch_lock:
+            self.prefetched_oids.add(oid)
+        ds = self._route_prefetch(oid)
+        if ds is None:
+            return self.record(oid)  # no reachable replica: skip quietly
         tr = self.obs.tracer if self.obs is not None else None
         if tr is not None:
             tr.predicted([oid], origin)
             tr.dispatched([oid], ds.ds_id, tr.new_batch())
             t_q = time.perf_counter()
             tr.claimed([oid], ds.ds_id, t=t_q)
-        did_load = ds.load_into_memory(oid, prefetch=True)
+        try:
+            did_load = ds.load_into_memory(oid, prefetch=True)
+        except ServiceCrashed:
+            self._note_service_down(ds.ds_id)
+            self._failover_redispatch(ds.ds_id, [oid])
+            return self.record(oid)
         if tr is not None:
             if did_load:
                 # per-oid loads have no slot-wait visibility: the whole
@@ -680,8 +953,6 @@ class ObjectStore:
             ds.batch_dispatches += 1
             if did_load:
                 ds.prefetch_loads += 1
-        with self._prefetch_lock:
-            self.prefetched_oids.add(oid)
         return ds.disk[oid]
 
     def prefetch_batch(self, oids: Iterable[int], runtime=None,
@@ -695,15 +966,25 @@ class ObjectStore:
         prefetched for accuracy (exactly what the per-oid path records);
         suppressed ones are tallied in the per-service ``dedup_suppressed``.
         Without a ``runtime`` the batches load on the calling thread.
-        Returns the number of batch tasks submitted."""
+        Returns the number of batch tasks submitted.
+
+        Under replication the grouping routes each oid to its best replica
+        (cached/least-queued), and a batch that lands on a service that
+        crashed between routing and claiming is re-dispatched to the
+        survivors instead of being lost."""
+        oids = list(oids)
         groups: dict[int, list[int]] = {}
+        skipped = 0
         for oid in oids:
-            groups.setdefault(self._placement[oid], []).append(oid)
+            ds = self._route_prefetch(oid)
+            if ds is None:
+                skipped += 1  # unreachable: demand will surface it if needed
+                continue
+            groups.setdefault(ds.ds_id, []).append(oid)
+        with self._prefetch_lock:
+            self.prefetched_oids.update(oids)
         if not groups:
             return 0
-        with self._prefetch_lock:
-            for batch in groups.values():
-                self.prefetched_oids.update(batch)
         tr = self.obs.tracer if self.obs is not None else None
         submitted = 0
         for ds_id, batch in groups.items():
@@ -711,7 +992,13 @@ class ObjectStore:
             if tr is not None:
                 tr.predicted(batch, origin)
                 tr.dispatched(batch, ds_id, tr.new_batch())
-            todo = ds.claim_prefetch_batch(batch)
+            try:
+                todo = ds.claim_prefetch_batch(batch)
+            except ServiceCrashed:
+                self._note_service_down(ds_id)
+                self._failover_redispatch(ds_id, batch,
+                                          runtime=runtime, origin=origin)
+                continue
             if tr is not None:
                 if todo:
                     tr.claimed(todo, ds_id)
@@ -731,6 +1018,84 @@ class ObjectStore:
     def peek(self, oid: int) -> PersistentObject:
         """Read a record without cost accounting (builders / assertions)."""
         return self.record(oid)
+
+    # -- failure injection & detection ---------------------------------------
+
+    def crash_service(self, ds_id: int, announce: bool = True) -> None:
+        """Fail-stop one Data Service: its memory cache and in-flight loads
+        are gone (disk records survive on the replicas).  ``announce=False``
+        models a *silent* failure — routing keeps sending traffic there
+        until the error path or the heartbeat monitor notices."""
+        self.services[ds_id].crash()
+        with self._metrics_lock:
+            self.metrics.services_crashed += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("service-crash", service=ds_id)
+        if announce:
+            self._note_service_down(ds_id)
+
+    def restore_service(self, ds_id: int) -> None:
+        """Bring a crashed (or flagged) service back: empty cache, healthy
+        routing state, readmitted to the heartbeat monitor."""
+        ds = self.services[ds_id]
+        with ds._cache_lock:
+            ds.alive = True
+        self._down.discard(ds_id)
+        self._slow.discard(ds_id)
+        if self.fault is not None:
+            self.fault.readmit(ds_id)
+
+    def attach_fault_detection(self, **kwargs) -> "Any":
+        """Wire the ``runtime.fault`` machinery (HeartbeatMonitor +
+        StragglerDetector) into this store: landed loads beat, the demand
+        path ticks, missed beats mark services down and persistent disk-time
+        outliers get deprioritized by routing."""
+        from ..runtime.fault import StoreFaultDetector
+
+        self.fault = StoreFaultDetector(self, **kwargs)
+        return self.fault
+
+    def _note_service_down(self, ds_id: int) -> None:
+        """Record a detected-dead service (error path, heartbeat timeout or
+        explicit announce); idempotent, routing avoids it from now on."""
+        if ds_id in self._down:
+            return
+        self._down.add(ds_id)
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("service-down", service=ds_id)
+
+    def _note_straggler(self, ds_id: int) -> None:
+        """Record a detector-flagged straggler: routing deprioritizes it
+        when a healthier replica exists (it stays available — slow, not
+        dead)."""
+        if ds_id in self._slow:
+            return
+        self._slow.add(ds_id)
+        with self._metrics_lock:
+            self.metrics.stragglers_flagged += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("straggler-flagged", service=ds_id)
+
+    def _failover_redispatch(self, from_ds: int, oids: list[int],
+                             runtime=None, origin: str = "failover") -> int:
+        """Re-dispatch prefetch oids that were claimed by (or headed for) a
+        service that died before landing them.  Routing now avoids the dead
+        service, so the batch re-groups onto surviving replicas; with
+        replication 1 there is nowhere to go and the oids fall back to
+        demand misses."""
+        if not oids:
+            return 0
+        with self._metrics_lock:
+            self.metrics.failovers += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.dropped(oids, "service-crash")
+            tr.instant("prefetch-failover", service=from_ds, oids=len(oids))
+        return self.prefetch_batch(oids, runtime=runtime,
+                                   origin=origin or "failover")
 
     # -- bookkeeping ---------------------------------------------------------
 
@@ -810,7 +1175,12 @@ class ObjectStore:
         but never accessed. False negatives: accessed but never prefetched."""
         return prefetch_accuracy(self.prefetched_oids, self.accessed_oids)
 
-    def populate_collection(self, cls: str, payloads: Iterable[dict[str, Any]]) -> list[int]:
-        """Store many objects of one class round-robin across Data Services
-        (how dataClay distributes a stored collection)."""
-        return [self.put(cls, p) for p in payloads]
+    def populate_collection(self, cls: str, payloads: Iterable[dict[str, Any]],
+                            groups: Optional[Iterable[Optional[str]]] = None) -> list[int]:
+        """Store many objects of one class distributed across Data Services
+        by the placement policy (how dataClay distributes a stored
+        collection).  ``groups`` optionally supplies one locality hint per
+        payload (element subtree keys for the locality policy)."""
+        if groups is None:
+            return [self.put(cls, p) for p in payloads]
+        return [self.put(cls, p, group=g) for p, g in zip(payloads, groups)]

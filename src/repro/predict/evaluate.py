@@ -186,7 +186,7 @@ def _pga_populate(store, populate_pga) -> int:
 # populated store so any change to an app or its populate sizes invalidates
 # the entry.  ``--no-trace-cache`` (or CAPRE_TRACE_CACHE=0) bypasses it.
 
-TRACE_CACHE_VERSION = 1
+TRACE_CACHE_VERSION = 2  # v2: blob carries the put log (placement rebuilds)
 DEFAULT_TRACE_CACHE_DIR = os.path.join("artifacts", "predict", "traces")
 
 
@@ -249,7 +249,7 @@ def _snapshot_store(store) -> list:
     ]
 
 
-def _apply_store_snapshot(store, snapshot: list) -> None:
+def _apply_store_snapshot(store, snapshot: list, put_log: list) -> None:
     import itertools
 
     from repro.pos.store import PersistentObject
@@ -260,8 +260,13 @@ def _apply_store_snapshot(store, snapshot: list) -> None:
         ds.disk.clear()
         for oid, cls, fields in objs:
             ds.disk[oid] = PersistentObject(oid=oid, cls=cls, fields=fields)
-            store._placement[oid] = ds.ds_id
+            store._placement[oid] = (ds.ds_id,)
             max_oid = max(max_oid, oid)
+    # the creation log (oid, cls, group, pin) rides along so a cached store
+    # can still rebuild_placement() under another policy/replication
+    store._put_log = [
+        (oid, cls, group, pin) for oid, cls, group, pin in put_log
+    ]
     store._oid_counter = itertools.count(max_oid + 1)
 
 
@@ -284,7 +289,7 @@ def _load_cached_traces(path: str, wl: Workload, fingerprint: dict) -> Optional[
         )
         for run in blob["traces"]
     ]
-    return blob["store"], traces
+    return blob["store"], blob.get("put_log", []), traces
 
 
 def _save_cached_traces(path: str, fingerprint: dict, store,
@@ -295,6 +300,7 @@ def _save_cached_traces(path: str, fingerprint: dict, store,
     blob = {
         "fingerprint": fingerprint,
         "store": _snapshot_store(store),
+        "put_log": [list(entry) for entry in store._put_log],
         "traces": [[ev.to_tuple() for ev in t.events] for t in traces],
     }
     tmp = f"{path}.tmp.{os.getpid()}"
@@ -327,8 +333,8 @@ def record_workload(
         if os.path.exists(path):
             cached = _load_cached_traces(path, wl, fingerprint)
             if cached is not None:
-                snapshot, traces = cached
-                _apply_store_snapshot(client.store, snapshot)
+                snapshot, put_log, traces = cached
+                _apply_store_snapshot(client.store, snapshot, put_log)
                 return client, root, traces
     traces = []
     for _ in range(runs):
@@ -410,7 +416,7 @@ class VirtualReplay:
 
     def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
                  policy: str = DEFAULT_POLICY, shared_budget: bool = False,
-                 dispatch: str = "per-oid", tracer=None):
+                 dispatch: str = "per-oid", tracer=None, scenario=None):
         from repro.obs import Histogram, Meter
 
         n = len(store.services)
@@ -434,7 +440,19 @@ class VirtualReplay:
         else:
             self.budget = None
             self.policies = [make_policy(policy, capacity=cache_capacity) for _ in range(n)]
-        self.disks = [VirtualDisk(latency) for _ in range(n)]
+        # failure regime (pos.latency.FailureScenario): per-service disk
+        # scales model stragglers directly on each VirtualDisk; a crash is
+        # applied lazily once the virtual clock passes crash_at (so the
+        # in-flight prefetch state at that instant is what gets lost) —
+        # the virtual-clock mirror of crash_service + failover routing
+        self.scenario = scenario
+        scales = scenario.straggler_scales() if scenario is not None else {}
+        self.dead: set[int] = set()
+        self.failovers = 0  # in-flight prefetch loads re-dispatched off the corpse
+        self.crash_lost = 0  # resident lines lost with the crashed cache
+        self._crash_applied = False
+        self.disks = [VirtualDisk(latency, scale=scales.get(i, 1.0))
+                      for i in range(n)]
         self.caches: list[dict[int, _CacheEntry]] = [{} for _ in range(n)]
         self.inflight: list[dict[int, tuple[float, float]]] = [{} for _ in range(n)]
         self.t = 0.0
@@ -527,6 +545,97 @@ class VirtualReplay:
             self.flushed_writes += 1
             self.disks[ds_i].schedule_write_back(self.t)
 
+    # -- replica routing & failure injection ---------------------------------
+
+    def _route(self, oid: int) -> int:
+        """Virtual mirror of ``ObjectStore._route_demand``: primary when
+        replication is 1 (byte-identical legacy behavior), else the alive
+        replica that already holds / is loading the line, falling back to
+        the least-queued disk (earliest-free slot; ties in replica order).
+        Stragglers deprioritize themselves here — their slots free later."""
+        from repro.pos.store import NoReplicaAvailable
+
+        reps = self.store.replicas_of(oid)
+        if len(reps) == 1:
+            if reps[0] in self.dead:
+                raise NoReplicaAvailable(oid, reps)
+            return reps[0]
+        alive = [i for i in reps if i not in self.dead]
+        if not alive:
+            raise NoReplicaAvailable(oid, reps)
+        for i in alive:
+            if oid in self.caches[i] or oid in self.inflight[i]:
+                return i
+        return min(alive, key=lambda i: (min(self.disks[i]._slots),
+                                         reps.index(i)))
+
+    def _route_prefetch(self, oid: int) -> Optional[int]:
+        """Prefetch routing: like ``_route`` but an unreachable object is
+        skipped (None) instead of raising — demand surfaces real losses."""
+        reps = self.store.replicas_of(oid)
+        alive = [i for i in reps if i not in self.dead]
+        if not alive:
+            return None
+        if len(alive) == 1:
+            return alive[0]
+        for i in alive:
+            if oid in self.caches[i] or oid in self.inflight[i]:
+                return i
+        return min(alive, key=lambda i: (min(self.disks[i]._slots),
+                                         reps.index(i)))
+
+    def _maybe_crash(self) -> None:
+        """Apply the scenario's crash once the virtual clock reaches it:
+        the service's resident cache dies, its in-flight prefetch loads are
+        re-dispatched onto a surviving replica ``failover_delay`` after the
+        crash (mirroring ``_failover_redispatch`` on the live store), and
+        the application clock eats the detection delay once."""
+        sc = self.scenario
+        if (sc is None or sc.crash_service is None or self._crash_applied
+                or self.t < sc.crash_at):
+            return
+        self._crash_applied = True
+        i = sc.crash_service
+        self.dead.add(i)
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("service-crash", service=i, t=sc.crash_at)
+        cache = self.caches[i]
+        for oid in list(cache):
+            entry = cache.pop(oid)
+            if self.budget is not None:
+                self.budget.note_remove(oid)
+            else:
+                self.policies[i].note_remove(oid)
+            self.crash_lost += 1
+            self._evicted_ever.add(oid)
+            if entry.source == "pf" and not entry.used:
+                self.evicted_before_use += 1
+            if tr is not None:
+                tr.evicted(oid, t=sc.crash_at)
+        pend, self.inflight[i] = dict(self.inflight[i]), {}
+        if tr is not None and pend:
+            tr.dropped(list(pend), "service-crash", t=sc.crash_at)
+        re_t = sc.crash_at + sc.failover_delay
+        for oid in pend:
+            alt = self._route_prefetch(oid)
+            if alt is None:
+                continue  # replication 1: the load is simply lost
+            start, done = self.disks[alt].schedule(re_t)
+            self.inflight[alt][oid] = (start, done)
+            self.failovers += 1
+            self.prefetch_loads += 1
+            if tr is not None:
+                tr.predicted([oid], "failover", t=re_t)
+                tr.dispatched([oid], alt, tr.new_batch(), t=re_t)
+                tr.claimed([oid], alt, t=re_t)
+                tr.loaded([oid], alt, self.disks[alt].last_slot,
+                          re_t, start, done)
+        if tr is not None:
+            tr.instant("prefetch-failover", service=i, t=re_t,
+                       oids=len(pend))
+        self.t += sc.failover_delay  # the app notices the failover once
+
     # -- the two event kinds -------------------------------------------------
 
     def predict(self, oids: Sequence[int], origin: str = "") -> None:
@@ -537,6 +646,7 @@ class VirtualReplay:
         by delaying the *issue* time of the loads (the submitting side
         serializes task starts; the application clock itself is not
         advanced, prefetch dispatch runs on background threads)."""
+        self._maybe_crash()
         if self.dispatch == "batch":
             self._predict_batched(oids, origin=origin)
             return
@@ -544,7 +654,9 @@ class VirtualReplay:
         overhead = self.latency.dispatch_overhead
         for i, oid in enumerate(oids):
             issue_t = self.t + (i + 1) * overhead
-            ds_i = self.store.service_of(oid).ds_id
+            ds_i = self._route_prefetch(oid)
+            if ds_i is None:
+                continue  # no reachable replica: skip, demand surfaces it
             # promote completions up to the app clock only — a load issued
             # earlier in this very emission is *in flight*, not resident
             self._materialize(ds_i, self.t)
@@ -580,7 +692,10 @@ class VirtualReplay:
         the surviving loads as one pipelined batch on the service's disk."""
         groups: dict[int, list[int]] = {}
         for oid in oids:
-            groups.setdefault(self.store.service_of(oid).ds_id, []).append(oid)
+            ds_i = self._route_prefetch(oid)
+            if ds_i is None:
+                continue  # no reachable replica: skip, demand surfaces it
+            groups.setdefault(ds_i, []).append(oid)
         tr = self.tracer
         overhead = self.latency.dispatch_overhead
         submitted = 0
@@ -626,7 +741,8 @@ class VirtualReplay:
         whatever part of the disk load prefetching did not hide.  A write
         to an uncached object write-allocates — the same demand load a read
         pays — and always leaves the line dirty."""
-        ds_i = self.store.service_of(oid).ds_id
+        self._maybe_crash()
+        ds_i = self._route(oid)
         if self.cur_ds != ds_i:
             self.t += self.latency.remote_hop
             self.cur_ds = ds_i
@@ -637,6 +753,9 @@ class VirtualReplay:
             self.writes += 1
         needed_at = self.t
         tr = self.tracer
+        # per-service disk time (straggler scales fold in; exact x*1.0
+        # multiplication keeps no-fault accounting byte-identical)
+        disk_s = self.disks[ds_i]._disk_load
         cache = self.caches[ds_i]
         entry = cache.get(oid)
         if entry is not None:
@@ -645,7 +764,7 @@ class VirtualReplay:
             self.policies[ds_i].note_access(oid)
             if entry.source == "pf":
                 if not entry.used:
-                    self.hidden_seconds += self.latency.disk_load
+                    self.hidden_seconds += disk_s
                 self.timely += 1
             entry.used = True
             if write:
@@ -653,13 +772,13 @@ class VirtualReplay:
             self.stall_hist.record(0.0)
             if tr is not None:
                 tr.demand(oid, ds_i, needed_at, 0.0, False,
-                          self.latency.disk_load, t=needed_at)
+                          disk_s, t=needed_at)
         elif oid in self.inflight[ds_i]:
             # predicted, still in flight: the app waits out the remainder
             _start, done = self.inflight[ds_i].pop(oid)
             stall = done - needed_at
             self.stall_seconds += stall
-            self.hidden_seconds += max(0.0, self.latency.disk_load - stall)
+            self.hidden_seconds += max(0.0, disk_s - stall)
             self.t = done
             self.partial += 1
             self._insert(ds_i, oid, "pf", used=True)
@@ -667,7 +786,7 @@ class VirtualReplay:
             self.stall_hist.record(stall)
             if tr is not None:
                 tr.demand(oid, ds_i, needed_at, stall, False,
-                          self.latency.disk_load, t=done)
+                          disk_s, t=done)
         else:
             # unpredicted (or evicted): full demand load, queueing behind
             # whatever the prefetcher has piled onto this service's disk
@@ -683,7 +802,7 @@ class VirtualReplay:
             self.stall_hist.record(stall)
             if tr is not None:
                 tr.demand(oid, ds_i, needed_at, stall, True,
-                          self.latency.disk_load, t=done)
+                          disk_s, t=done)
         if write and entry is not None:
             entry.dirty = True
         self.t += self.latency.think
@@ -733,6 +852,11 @@ class ReplayResult:
     # per-app scale from artifacts/predict/calibration.csv; 1.0 = unfitted)
     calib_scale: float = 1.0
     calibrated_stall_s: float = 0.0
+    # topology + failure regime the row was replayed under
+    placement: str = "round-robin"
+    replication: int = 1
+    scenario: str = "no-fault"
+    failovers: int = 0
     overhead: dict = field(default_factory=dict)
 
     def row(self) -> dict:
@@ -743,14 +867,16 @@ class ReplayResult:
 
 def replay_baseline(
     trace: RecordedTrace, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
-    policy: str = DEFAULT_POLICY, shared_budget: bool = False
+    policy: str = DEFAULT_POLICY, shared_budget: bool = False, scenario=None
 ) -> VirtualReplay:
     """The no-prefetch reference: every cold (or thrashed-out) demand event
     pays the full disk load (writes included — write-allocate + dirty
     evictions).  Same trace, same clock, same eviction policy, no
-    predictions."""
+    predictions.  A fault ``scenario`` applies to the baseline too — the
+    reference for a faulted replay is the same faults without prefetch."""
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
-                           policy=policy, shared_budget=shared_budget)
+                           policy=policy, shared_budget=shared_budget,
+                           scenario=scenario)
     for ev in as_events(trace.events):
         if ev.kind == ACCESS:
             engine.access(ev.oid)
@@ -772,16 +898,20 @@ def replay(
     baseline_stall_seconds: Optional[float] = None,
     tracer=None,
     calibration=None,
+    scenario=None,
 ) -> ReplayResult:
     """Drive ``predictor`` through the recorded event stream on the virtual
     clock and score what its prefetches would have hidden.  Pass a
     ``repro.obs.Tracer`` to collect full lifecycle spans (virtual
-    timestamps) and a ``predict.calibration.Calibration`` to report the
-    stalls in calibrated wall seconds too."""
+    timestamps), a ``predict.calibration.Calibration`` to report the stalls
+    in calibrated wall seconds too, and a ``pos.latency.FailureScenario``
+    to replay under a straggler/crash regime (the store's placement +
+    replication are read off ``store`` itself — ``rebuild_placement``
+    first to sweep policies)."""
     predictor.attach(store, reg)
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
                            policy=policy, shared_budget=shared_budget, dispatch=dispatch,
-                           tracer=tracer)
+                           tracer=tracer, scenario=scenario)
     name = predictor.name
     predicted: set[int] = set()
     accessed: set[int] = set()
@@ -812,7 +942,7 @@ def replay(
     if baseline_stall_seconds is None:
         baseline_stall_seconds = replay_baseline(
             trace, store, latency=latency, cache_capacity=cache_capacity,
-            policy=policy, shared_budget=shared_budget,
+            policy=policy, shared_budget=shared_budget, scenario=scenario,
         ).stall_seconds
     saved = (
         100.0 * (1.0 - engine.stall_seconds / baseline_stall_seconds)
@@ -872,6 +1002,10 @@ def replay(
         stall_p999_s=p999 or 0.0,
         calib_scale=scale,
         calibrated_stall_s=engine.stall_seconds * scale,
+        placement=getattr(store, "placement_name", "round-robin"),
+        replication=getattr(store, "replication", 1),
+        scenario=scenario.name if scenario is not None else "no-fault",
+        failovers=engine.failovers,
         overhead=overhead,
     )
 
@@ -894,14 +1028,28 @@ def evaluate_workload(
     latency: LatencyModel = REPLAY,
     recorded: Optional[tuple[POSClient, int, list[RecordedTrace]]] = None,
     calibration=None,
+    placement: str = "round-robin",
+    replication: int = 1,
+    scenarios: Sequence[str] = ("no-fault",),
 ) -> list[ReplayResult]:
     """Record (train + eval runs), then replay every requested predictor
-    under every (cache capacity, eviction policy, dispatch mode) — miners
-    warmed on the train run, everyone scored on the eval run.
-    ``rop_depth`` is only consulted when no ``config`` is supplied; pass
-    ``recorded`` to reuse traces from ``record_catalog``."""
+    under every (cache capacity, eviction policy, dispatch mode, failure
+    scenario) — miners warmed on the train run, everyone scored on the eval
+    run.  ``rop_depth`` is only consulted when no ``config`` is supplied;
+    pass ``recorded`` to reuse traces from ``record_catalog``.  Recording
+    is placement-independent (the event stream is oids in program order),
+    so one recorded trace replays under every placement/replication via
+    ``rebuild_placement``; a crash scenario's crash time is anchored at a
+    fraction of the *no-fault* baseline's completion time so the crash
+    lands mid-run for every app."""
+    from repro.pos.latency import make_scenario
+
     client, _root, traces = recorded if recorded is not None else record_workload(wl, runs=2)
     train, eval_ = traces[0], traces[-1]
+    store = client.store
+    if (placement != store.placement_name
+            or replication != store.replication):
+        store.rebuild_placement(placement, replication=replication)
     reg = client.logic_module.registered[wl.name]
     cfg = config if config is not None else SessionConfig(rop_depth=rop_depth)
     results = []
@@ -909,29 +1057,46 @@ def evaluate_workload(
         for policy in policies:
             # the no-prefetch reference never dispatches: one baseline
             # serves every dispatch mode of this (capacity, policy) cell
-            baseline = replay_baseline(
-                eval_, client.store, latency=latency, cache_capacity=capacity,
+            nofault_baseline = replay_baseline(
+                eval_, store, latency=latency, cache_capacity=capacity,
                 policy=policy, shared_budget=shared_budget,
-            ).stall_seconds
-            for dispatch in dispatch_modes:
-                for mode in modes if modes is not None else available(kind="pos"):
-                    predictor = make_pos_predictor(mode, config=cfg)
-                    predictor.warm(train.accesses)
-                    results.append(
-                        replay(
-                            eval_,
-                            predictor,
-                            client.store,
-                            reg,
-                            latency=latency,
-                            cache_capacity=capacity,
-                            policy=policy,
-                            shared_budget=shared_budget,
-                            dispatch=dispatch,
-                            baseline_stall_seconds=baseline,
-                            calibration=calibration,
+            )
+            # crash-time anchor: the stall-free floor (think + hops) is the
+            # one duration every replay of this cell shares — a fraction of
+            # the *baseline* end would fall past the end of a well-prefetched
+            # run (which finishes several times faster) and never fire
+            end_t = nofault_baseline.t - nofault_baseline.stall_seconds
+            for scenario_name in scenarios:
+                scenario = make_scenario(scenario_name, end_t=end_t)
+                if not scenario.is_fault:
+                    scenario = None
+                    baseline = nofault_baseline.stall_seconds
+                else:
+                    baseline = replay_baseline(
+                        eval_, store, latency=latency, cache_capacity=capacity,
+                        policy=policy, shared_budget=shared_budget,
+                        scenario=scenario,
+                    ).stall_seconds
+                for dispatch in dispatch_modes:
+                    for mode in modes if modes is not None else available(kind="pos"):
+                        predictor = make_pos_predictor(mode, config=cfg)
+                        predictor.warm(train.accesses)
+                        results.append(
+                            replay(
+                                eval_,
+                                predictor,
+                                store,
+                                reg,
+                                latency=latency,
+                                cache_capacity=capacity,
+                                policy=policy,
+                                shared_budget=shared_budget,
+                                dispatch=dispatch,
+                                baseline_stall_seconds=baseline,
+                                calibration=calibration,
+                                scenario=scenario,
+                            )
                         )
-                    )
     return results
 
 
@@ -947,6 +1112,9 @@ def evaluate_apps(
     trace_cache: Optional[str] = "default",
     calibration=None,
     calibrated: bool = False,
+    placement: str = "round-robin",
+    replication: int = 1,
+    scenarios: Sequence[str] = ("no-fault",),
 ) -> list[ReplayResult]:
     """``calibrated=True`` replays each app under its calibrated latency
     model (``calibration.calibrated_model``) instead of the raw REPLAY
@@ -990,6 +1158,9 @@ def evaluate_apps(
                 latency=wl_latency,
                 recorded=recorded[name],
                 calibration=wl_calibration,
+                placement=placement,
+                replication=replication,
+                scenarios=scenarios,
             )
         )
     return out
@@ -1007,6 +1178,8 @@ _COLUMNS = (
     ("cache_capacity", "{}"),
     ("policy", "{}"),
     ("dispatch", "{}"),
+    ("placement", "{}"),
+    ("scenario", "{}"),
     ("precision", "{:.3f}"),
     ("recall", "{:.3f}"),
     ("coverage", "{:.3f}"),
@@ -1048,6 +1221,10 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     "calib_scale",
     "obs_seconds",
     "obs_events",
+    # topology + failure-regime columns (placement/scenario are already in
+    # _COLUMNS): keyed rows stay unique on the legacy key at the defaults
+    "replication",
+    "failovers",
 )
 
 
@@ -1103,6 +1280,16 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="comma-separated dispatch modes to sweep (per-oid = one "
                          "executor submission per predicted oid; batch = one "
                          "deduped request per Data Service)")
+    ap.add_argument("--placement", default="round-robin",
+                    help="object placement policy to replay under "
+                         "(round-robin, consistent-hash, locality); the "
+                         "recorded traces re-place via rebuild_placement")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="replication factor R (primary + ring successors); "
+                         "crash scenarios need R >= 2 to complete")
+    ap.add_argument("--scenario", default="no-fault",
+                    help="comma-separated failure scenarios to sweep "
+                         "(no-fault, straggler, crash)")
     ap.add_argument("--calibrated", action="store_true",
                     help="replay each app under its calibrated latency model "
                          "(fitted scales from artifacts/predict/calibration.csv) "
@@ -1123,12 +1310,15 @@ def main(argv: Optional[list[str]] = None) -> None:
     capacities = tuple(int(c) for c in args.cache_capacity.split(",") if c != "")
     policies = tuple(p for p in args.cache_policy.split(",") if p)
     dispatch_modes = tuple(d for d in args.dispatch.split(",") if d)
+    scenarios = tuple(s for s in args.scenario.split(",") if s)
     results = evaluate_apps(
         apps=apps, modes=modes, rop_depth=args.rop_depth, cache_capacities=capacities,
         policies=policies, shared_budget=args.shared_budget,
         dispatch_modes=dispatch_modes,
         trace_cache=None if args.no_trace_cache else "default",
         calibrated=args.calibrated,
+        placement=args.placement, replication=args.replication,
+        scenarios=scenarios,
     )
     print(format_table(results))
     if not args.no_csv:

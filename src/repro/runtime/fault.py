@@ -143,6 +143,67 @@ class StragglerDetector:
         return out
 
 
+class StoreFaultDetector:
+    """Failure detection for the persistent object store (the POS-side
+    consumer of :class:`HeartbeatMonitor` + :class:`StragglerDetector`,
+    which previously only served the training supervisor).
+
+    Every landed disk load on Data Service *i* calls ``beat(i, seconds)``:
+    the beat proves the service alive and the duration feeds the straggler
+    baseline.  The store's demand path calls ``tick()`` periodically (every
+    ``check_every`` beats/accesses, amortizing the O(services) scans):
+
+      * services silent for ``heartbeat_timeout`` are reported to
+        ``store._note_service_down`` — the *slow path* for crashes nobody
+        tripped over (the fast path is the ``ServiceCrashed`` error);
+      * persistent disk-time outliers go to ``store._note_straggler`` so
+        replica routing deprioritizes them.
+    """
+
+    def __init__(self, store, heartbeat_timeout: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 straggler_threshold: float = 4.0,
+                 straggler_min_samples: int = 4,
+                 straggler_patience: int = 3,
+                 check_every: int = 32):
+        self.store = store
+        self.monitor = HeartbeatMonitor(
+            [ds.ds_id for ds in store.services],
+            timeout=heartbeat_timeout,
+            on_failure=store._note_service_down,
+            clock=clock,
+        )
+        self.straggler = StragglerDetector(
+            threshold=straggler_threshold,
+            min_samples=straggler_min_samples,
+            patience=straggler_patience,
+        )
+        self.check_every = max(1, check_every)
+        self._lock = threading.Lock()
+        self._calls = 0
+
+    def beat(self, ds_id, seconds: Optional[float] = None) -> None:
+        self.monitor.beat(ds_id)
+        if seconds is not None:
+            with self._lock:
+                self.straggler.record(ds_id, seconds)
+
+    def readmit(self, ds_id) -> None:
+        self.monitor.readmit(ds_id)
+
+    def tick(self, force: bool = False) -> None:
+        """Amortized detection scan; ``force`` runs it regardless of the
+        call counter (tests, end-of-run sweeps)."""
+        with self._lock:
+            self._calls += 1
+            if not force and self._calls % self.check_every:
+                return
+            flagged = self.straggler.check()
+        self.monitor.check()  # invokes _note_service_down on newly silent
+        for ds_id in flagged:
+            self.store._note_straggler(ds_id)
+
+
 @dataclass
 class SupervisorReport:
     steps_completed: int = 0

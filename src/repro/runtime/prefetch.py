@@ -30,6 +30,11 @@ import numpy as np
 
 from repro.core.access_plan import AccessRecord, PrefetchPlan
 
+#: the process id the streamer's spans render under in a merged Perfetto
+#: timeline (Data Services own pids 0..n-1; the streamer is its own
+#: producer track — exporters label it via ``process_names``)
+STREAM_PID = 9000
+
 
 @dataclass
 class StreamMetrics:
@@ -84,6 +89,13 @@ class WeightStreamer:
     Passing a ``repro.obs.Registry`` adopts :class:`StreamMetrics` as a
     snapshot source and records every ``get`` wait into a
     ``stream_stall_s`` histogram (0.0 for prefetch hits).
+
+    Passing a ``repro.obs.Tracer`` records the same lifecycle spans the
+    ObjectStore emits (predicted -> dispatched -> claimed -> loaded ->
+    hit/partial/miss), with ``service=STREAM_PID`` so the streamer renders
+    as its own producer track in a merged Perfetto timeline.  Give the
+    streamer its OWN tracer — its path-derived ids share an oid space with
+    nothing else.  ``path_ids`` maps path -> span oid for labeling.
     """
 
     def __init__(
@@ -97,6 +109,7 @@ class WeightStreamer:
         warm_group_trace: Optional[list] = None,
         dispatch: str = "batch",
         registry=None,
+        tracer=None,
     ):
         self.store = store
         self.plan = plan
@@ -111,6 +124,8 @@ class WeightStreamer:
 
             registry.register_source("stream", lambda: asdict(self.metrics))
             self._stall_hist = registry.histogram("stream_stall_s")
+        self.tracer = tracer
+        self.path_ids: dict[str, int] = {}
         self._cache: dict[str, np.ndarray] = {}
         self._inflight: dict[str, threading.Event] = {}
         self._used: set[str] = set()  # paths actually served to compute
@@ -146,6 +161,27 @@ class WeightStreamer:
 
     # -- fetch machinery --------------------------------------------------------
 
+    def _span_id(self, path: str) -> int:
+        """Stable int id for a path's lifecycle spans (PrefetchSpan keys on
+        int oids; the streamer's ids are only unique within its own
+        tracer)."""
+        with self._lock:
+            sid = self.path_ids.get(path)
+            if sid is None:
+                sid = len(self.path_ids)
+                self.path_ids[path] = sid
+            return sid
+
+    def _disk_s(self, path: str) -> float:
+        """Modeled transfer seconds for hidden/stall attribution."""
+        base = getattr(self.store, "base_latency", 0.0)
+        bw = getattr(self.store, "bandwidth", 0.0)
+        try:
+            nbytes = self.store.nbytes(path)
+        except Exception:
+            return base
+        return base + (nbytes / bw if bw else 0.0)
+
     def _fetch_async(self, path: str) -> None:
         with self._lock:
             if path in self._cache or path in self._inflight:
@@ -175,34 +211,65 @@ class WeightStreamer:
         Under ``dispatch="per-oid"`` the same request instead pays one lock
         round trip and one pool submission per path — the reference arm of
         the dispatch A/B (``benchmarks.bench_streaming``)."""
+        paths = list(paths)
+        tr = self.tracer
+        if tr is not None and paths:
+            tr.predicted([self._span_id(p) for p in paths],
+                         origin=f"stream:{self.mode}")
         if self.dispatch == "per-oid":
             for path in paths:
                 with self._lock:
                     if path in self._cache or path in self._inflight:
                         self.metrics.dedup_suppressed += 1
-                        continue
-                    self._inflight[path] = threading.Event()
-                    self.metrics.batch_dispatches += 1
+                        suppressed = True
+                    else:
+                        self._inflight[path] = threading.Event()
+                        self.metrics.batch_dispatches += 1
+                        suppressed = False
+                if suppressed:
+                    if tr is not None:
+                        tr.suppressed([self._span_id(path)], STREAM_PID)
+                    continue
+                if tr is not None:
+                    # claiming = winning the in-flight dedupe, which just
+                    # happened under the lock (unlike the ObjectStore there
+                    # is no separate per-service claim step)
+                    sid = self._span_id(path)
+                    tr.dispatched([sid], STREAM_PID, tr.new_batch())
+                    tr.claimed([sid], STREAM_PID)
                 self._pool.submit(self._fetch_lane, [path])
             return
         todo: list[str] = []
+        sup: list[str] = []
         with self._lock:
             for path in paths:
                 if path in self._cache or path in self._inflight or path in todo:
                     self.metrics.dedup_suppressed += 1
+                    sup.append(path)
                     continue
                 self._inflight[path] = threading.Event()
                 todo.append(path)
+        if tr is not None and sup:
+            tr.suppressed([self._span_id(p) for p in sup], STREAM_PID)
         if not todo:
             return
+        if tr is not None:
+            ids = [self._span_id(p) for p in todo]
+            tr.dispatched(ids, STREAM_PID, tr.new_batch())
+            # claiming = winning the in-flight dedupe above (no separate
+            # per-service claim step in the streamer)
+            tr.claimed(ids, STREAM_PID)
         lanes = max(1, min(self._workers, len(todo)))
         with self._lock:
             self.metrics.batch_dispatches += lanes
         for i in range(lanes):
-            self._pool.submit(self._fetch_lane, todo[i::lanes])
+            self._pool.submit(self._fetch_lane, todo[i::lanes], i)
 
-    def _fetch_lane(self, paths: list[str]) -> None:
+    def _fetch_lane(self, paths: list[str], lane: int = 0) -> None:
+        tr = self.tracer
         for i, path in enumerate(paths):
+            sid = self._span_id(path) if tr is not None else -1
+            queued = time.perf_counter()
             try:
                 arr = self.store.fetch(path)
             except BaseException:
@@ -214,17 +281,25 @@ class WeightStreamer:
                 for ev in evs:
                     if ev is not None:
                         ev.set()
+                if tr is not None:
+                    tr.dropped([self._span_id(p) for p in paths[i:]],
+                               "stream-fetch-error")
                 raise
+            done = time.perf_counter()
             with self._lock:
                 self._cache[path] = arr
                 self.metrics.fetches += 1
                 self.metrics.bytes_moved += arr.nbytes
                 ev = self._inflight.pop(path, None)
+            if tr is not None:
+                # the pool lane is the slot: no separate slot wait here
+                tr.loaded([sid], STREAM_PID, lane, queued, queued, done)
             if ev is not None:
                 ev.set()
 
     def get(self, path: str) -> np.ndarray:
         """Blocking access from the compute thread."""
+        tr = self.tracer
         with self._lock:
             arr = self._cache.get(path)
             ev = self._inflight.get(path)
@@ -233,8 +308,13 @@ class WeightStreamer:
             self.metrics.prefetch_hits += 1
             if self._stall_hist is not None:
                 self._stall_hist.record(0.0)
+            if tr is not None:
+                tr.demand(self._span_id(path), STREAM_PID,
+                          time.perf_counter(), 0.0, full_load=False,
+                          disk_load_s=self._disk_s(path))
             return arr
         t0 = time.perf_counter()
+        was_inflight = ev is not None
         if ev is None:
             self._fetch_async(path)
             with self._lock:
@@ -246,6 +326,10 @@ class WeightStreamer:
         self.metrics.stall_seconds += stall
         if self._stall_hist is not None:
             self._stall_hist.record(stall)
+        if tr is not None:
+            tr.demand(self._span_id(path), STREAM_PID, t0, stall,
+                      full_load=not was_inflight,
+                      disk_load_s=self._disk_s(path))
         with self._lock:
             return self._cache[path]
 
@@ -302,3 +386,7 @@ class WeightStreamer:
 
     def close(self) -> None:
         self._pool.shutdown(wait=True, cancel_futures=True)
+        if self.tracer is not None:
+            # prefetched-but-never-demanded spans terminate as dropped so
+            # the exported timeline passes the one-terminal-state invariant
+            self.tracer.drop_active("stream-closed")

@@ -383,7 +383,8 @@ _GATE_HEADER = (
     "app,workload,predictor,cache_capacity,policy,timely_coverage,"
     "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
     "protected_evictions,dispatch,batch_dispatches,dedup_suppressed,"
-    "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s\n"
+    "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s,"
+              "placement,replication,scenario,failovers\n"
 )
 
 
