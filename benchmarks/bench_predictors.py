@@ -141,8 +141,15 @@ def _run_policy(results, wl, app_name, capacity, policy, shared_budget,
                         )
                     metrics = client.store.snapshot_metrics()
                     live_counters = {
-                        k: metrics[k] for k in ("batch_dispatches", "dedup_suppressed")
+                        k: metrics[k]
+                        for k in ("batch_dispatches", "dedup_suppressed",
+                                  "rfo_prefetches")
                     }
+                    # admission control lives on the session's runtime, not
+                    # the store: read it before the session closes
+                    live_counters["admission_dropped"] = (
+                        s.runtime.stats()["admission_dropped"]
+                    )
                     metrics.update(client.store.prefetch_accuracy())
                     metrics["evictions"] = sum(ds.evictions for ds in client.store.services)
                     if s.predictor is not None:

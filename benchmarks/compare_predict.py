@@ -34,7 +34,12 @@ the scoring loop), so equality-modulo-tolerance is a meaningful check:
     must be present, and per row the fresh ``stall_p99_s`` may not exceed
     the baseline tail by more than ``--p99-tolerance`` relative headroom
     (absolute floor ``P99_ABS_FLOOR_S``) — mean stall can stay flat while
-    the tail quietly doubles; this gate catches that.
+    the tail quietly doubles; this gate catches that;
+  * the static-optimizer columns (``rfo_prefetches``, ``truncated_hints``,
+    ``hint_priority_mean``, ``ownership_upgrades``, ``exec_delayed``) must
+    be present in the fresh header — a harness that silently dropped the
+    optimizer passes (RFO dirty-allocation, partial-traversal truncation,
+    priority-ranked dispatch, executor-pool modeling) fails the gate.
 
 ``--update-baseline`` regenerates the committed baseline in place from the
 fresh file — required in the same PR as any intentional column or metric
@@ -80,6 +85,13 @@ PCTL_COLUMNS = ("stall_p50_s", "stall_p99_s", "stall_p999_s",
 #: gate; only clean-regime rows (no-fault, round-robin, replication 1) are
 #: compared against the baseline, which is recorded in that regime
 PLACEMENT_COLUMNS = ("placement", "replication", "scenario", "failovers")
+
+#: the static-optimizer columns — a replay.csv missing them was produced
+#: before the hint optimizer existed (ISSUE 8: RFO write-set projection,
+#: partial-traversal truncation, cost-ranked dispatch, modeled executor
+#: saturation) and must fail the gate
+OPT_COLUMNS = ("rfo_prefetches", "truncated_hints", "hint_priority_mean",
+               "ownership_upgrades", "exec_delayed")
 
 #: p99 stall gating: fail when the fresh tail exceeds the baseline by more
 #: than ``rel`` (fractional) with an absolute floor of ``abs`` seconds —
@@ -150,6 +162,12 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02,
     if missing_cols:
         failures.append(
             f"{current_path}: placement/scenario columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
+    missing_cols = [c for c in OPT_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: static-optimizer columns missing from header: "
             f"{', '.join(missing_cols)}"
         )
     for key in sorted(baseline):

@@ -42,6 +42,7 @@ from repro.obs import (
     check_span_invariants,
     chrome_trace,
     full_lifecycle_phase_counts,
+    validate_flow_pairing,
     write_chrome_trace,
 )
 from repro.pos.client import POSClient, SessionConfig
@@ -67,6 +68,17 @@ def _validate(name: str, spans, clock: str) -> list[str]:
             )
     if not loaded:
         problems.append(f"{name}: no loaded prefetch spans at all")
+    # flow arrows: every used prefetch (hit/partial) must export a paired
+    # prediction -> load -> demand flow chain, and no arrow may dangle
+    problems += [f"{name}: {p}" for p in validate_flow_pairing(obj)]
+    used = [s for s in spans
+            if s.kind == "prefetch" and s.outcome in ("hit", "partial")]
+    n_flows = len({ev.get("id") for ev in obj.get("traceEvents", [])
+                   if ev.get("ph") == "s"})
+    if len(used) != n_flows:
+        problems.append(
+            f"{name}: {len(used)} used prefetch spans but {n_flows} flow arrows"
+        )
     return problems
 
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 
 from repro.core.lang import (
     Application,
+    Break,
     Call,
     ClassDef,
     Compute,
@@ -142,6 +143,40 @@ def build_bank_app() -> Application:
                                 (Get(Var("trans"), "amount"), Var("bonus")),
                                 "plusBonus",
                             ),
+                        )
+                    ],
+                )
+            ],
+        )
+    )
+    # public void findLargeTransaction(double floor) {
+    #   for (Transaction trans : this.transactions) {
+    #     if (trans.amount >= floor) { trans.account.cust; break; }
+    #   }
+    # }
+    # An early-exit scan: the break taints the loop, so the static
+    # optimizer's partial-traversal pass marks the transactions[] hint with
+    # a prefix bound instead of predicting the whole collection.
+    bank.add_method(
+        MethodDef(
+            "findLargeTransaction",
+            params=(("floor", "double"),),
+            body=[
+                ForEach(
+                    "trans",
+                    This(),
+                    "transactions",
+                    [
+                        If(
+                            cond=Compute(
+                                lambda a, f: a >= f,
+                                (Get(Var("trans"), "amount"), Var("floor")),
+                                "overFloor",
+                            ),
+                            then=[
+                                ExprStmt(Get(Get(Var("trans"), "account"), "cust")),
+                                Break(),
+                            ],
                         )
                     ],
                 )

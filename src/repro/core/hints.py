@@ -38,6 +38,19 @@ Steps = tuple[tuple[str, str], ...]
 @dataclass(frozen=True)
 class Hint:
     steps: Steps
+    # -- static-optimizer annotations (core.opt) ---------------------------
+    # All compare=False: hint identity, eq/hash, the all-callers dedup and
+    # the replay trace-cache fingerprint stay steps-only — the optimizer
+    # decorates hints, it never changes which hints exist.
+    #: step indices whose navigated-to object is a known update site — the
+    #: prefetch of that object should be read-for-ownership (dirty-allocate)
+    rfo_depths: tuple[int, ...] = field(default=(), compare=False)
+    #: partial-traversal truncation: at step ``trunc_step`` (a collection),
+    #: only the first ``prefix_bound`` elements are predicted
+    prefix_bound: Optional[int] = field(default=None, compare=False)
+    trunc_step: Optional[int] = field(default=None, compare=False)
+    #: static priority from the cost model (higher = dispatch sooner)
+    priority: float = field(default=0.0, compare=False)
 
     def __str__(self) -> str:
         return ".".join(f + ("[]" if c == lang.COLLECTION else "") for f, c in self.steps)
@@ -47,6 +60,14 @@ class Hint:
     @property
     def has_collection(self) -> bool:
         return any(c == lang.COLLECTION for _f, c in self.steps)
+
+    @property
+    def rfo(self) -> bool:
+        return bool(self.rfo_depths)
+
+    @property
+    def truncated(self) -> bool:
+        return self.prefix_bound is not None
 
 
 def _included_nodes(g: MethodGraph, policy: str):
@@ -84,6 +105,7 @@ class AnalysisReport:
     full_hints: dict[str, tuple[Hint, ...]]  # PH_m before caller dedup
     hints: dict[str, tuple[Hint, ...]]  # PH_m after caller dedup (section 5.1.3)
     stats: "CorpusStats" = None
+    opt: object = None  # core.opt.OptStats once the optimizer has run
 
     def hints_str(self, key: str) -> set[str]:
         return {str(h) for h in self.hints[key]}
@@ -185,8 +207,16 @@ def _dedup_against_callers(
 
 
 def analyze_application(
-    app: lang.Application, policy: str = INCLUDE_BRANCH_DEPENDENT
+    app: lang.Application, policy: str = INCLUDE_BRANCH_DEPENDENT,
+    optimize: bool = True,
 ) -> AnalysisReport:
     """One-call entry point: lower, run Algorithm 1 on every method, generate
-    deduplicated prefetching hints."""
-    return generate(CAPreAnalysis(app), policy)
+    deduplicated prefetching hints, and (unless ``optimize=False``) run the
+    static optimizer passes (core.opt) that annotate each hint with RFO
+    depths, partial-traversal bounds and a dispatch priority."""
+    report = generate(CAPreAnalysis(app), policy)
+    if optimize:
+        from .opt import optimize_report  # lazy: opt imports this module
+
+        optimize_report(report, app=app)
+    return report

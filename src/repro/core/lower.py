@@ -96,6 +96,7 @@ def _lower_stmt(ctx: _Ctx, s: lang.Stmt) -> None:
                 "field": s.field,
                 "target": spec.target if spec else None,
                 "card": spec.card if spec else lang.SINGLE,
+                "persistent": bool(spec and spec.is_persistent),
             },
             used=(vo, vv),
         )
@@ -249,7 +250,8 @@ def _lower_expr(ctx: _Ctx, e: lang.Expr) -> str:
             spec = ctx.app.field_spec(e.cls, fname)
             ctx.emit(
                 ir.PUTFIELD,
-                params={"owner": e.cls, "field": fname, "target": spec.target, "card": spec.card},
+                params={"owner": e.cls, "field": fname, "target": spec.target,
+                        "card": spec.card, "persistent": bool(spec and spec.is_persistent)},
                 used=(v, vv),
             )
         return v

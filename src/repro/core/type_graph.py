@@ -56,6 +56,17 @@ class Node:
     occurrences: set[tuple[BranchPath, bool]] = field(default_factory=set)
     param_index: Optional[int] = None  # set on root nodes (0 == this)
     is_return: bool = False
+    # putfield occurrences whose *receiver* is this object — the object is a
+    # known update site (the interprocedural write-set of the opt.py RFO
+    # pass); same (branch_path, tainted) shape as ``occurrences``
+    write_occurrences: set[tuple[BranchPath, bool]] = field(default_factory=set)
+
+    @property
+    def written(self) -> bool:
+        """True when some execution of the analyzed method may write a field
+        of this object (conditional writes count: prefetching for ownership
+        ahead of a branchy update site is the whole point of RFO)."""
+        return bool(self.write_occurrences)
 
     @property
     def branch_dependent(self) -> bool:
@@ -218,6 +229,8 @@ class _GraphBuilder:
         t = instr.itype
         if t == ir.GETFIELD:
             self._visit_getfield(instr)
+        elif t == ir.PUTFIELD:
+            self._visit_putfield(instr)
         elif t == ir.ITER_INIT:
             src = self.var_state.get(instr.used_vars[0])
             self.var_state[instr.def_var] = src if isinstance(src, _CollRef) else None
@@ -257,6 +270,16 @@ class _GraphBuilder:
             return
         node = self.nav_child(src, p["field"], lang.SINGLE, p.get("target"), self._occurrence(instr))
         self.var_state[instr.def_var] = node
+
+    def _visit_putfield(self, instr: ir.Instr) -> None:
+        """Write-set pass: a putfield marks its *receiver* object as a known
+        update site.  The written field's own type doesn't matter (writing a
+        primitive like ``amount`` dirties the receiver's cache line exactly
+        like rewriting an association), so unlike getfield there is no
+        persistent-field filter — only the receiver must be a graph node."""
+        src = self.var_state.get(instr.used_vars[0])
+        if isinstance(src, Node):
+            src.write_occurrences.add(self._occurrence(instr))
 
     def _visit_invoke(self, instr: ir.Instr) -> None:
         p = instr.params
@@ -329,6 +352,16 @@ class _GraphBuilder:
     ) -> None:
         copied[callee_node.nid] = onto
         branch_path, tainted = occ
+        if callee_node.write_occurrences:
+            # interprocedural write-set propagation: the callee updates this
+            # object, so the caller's corresponding node is an update site
+            # too.  The callee's own branch numbering is meaningless here, so
+            # its conditionality is collapsed into the taint bit (mirroring
+            # how child occurrences fold in ``child.branch_dependent``).
+            clean = {bp for (bp, t) in callee_node.write_occurrences if not t}
+            onto.write_occurrences.add(
+                (branch_path, tainted or not _covers_unconditional(clean))
+            )
         for child in callee_node.children.values():
             child_occ = (branch_path, tainted or child.branch_dependent)
             new = self.nav_child(onto, child.field, child.card, child.type_name, child_occ)

@@ -27,6 +27,7 @@ from .export import (
     chrome_trace,
     full_lifecycle_phase_counts,
     validate_chrome_trace,
+    validate_flow_pairing,
     write_chrome_trace,
 )
 
@@ -86,5 +87,6 @@ __all__ = [
     "chrome_trace",
     "full_lifecycle_phase_counts",
     "validate_chrome_trace",
+    "validate_flow_pairing",
     "write_chrome_trace",
 ]

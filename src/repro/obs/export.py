@@ -12,6 +12,10 @@ Perfetto's UI at https://ui.perfetto.dev opens directly):
     so a prefetched oid shows >= 4 phases end to end;
   * the terminal outcome is an ``"i"`` (instant) event carrying the
     hidden/stalled attribution in ``args``;
+  * every prefetch span that reached its demand use also emits a **flow
+    arrow** (``"s"`` → ``"t"`` → ``"f"``, one shared numeric ``id`` per
+    span): prediction → load landing → demand hit, so Perfetto draws the
+    causal chain across tracks instead of leaving three disjoint slices;
   * ``"C"`` (counter) tracks derive disk-slot occupancy per service and a
     demand-queue depth from the spans themselves, so PR 5's demand-priority
     handoffs are visible without extra hooks.
@@ -72,7 +76,7 @@ def chrome_trace(spans: Sequence[PrefetchSpan], *, clock: str = "wall",
     services: set[int] = set()
     lanes: set[tuple[int, int]] = set()
 
-    for span in spans:
+    for flow_id, span in enumerate(spans):
         pid = max(span.service, 0)
         services.add(pid)
         tid = _DEMAND_TID if span.kind == "demand" else max(span.lane, 0)
@@ -113,6 +117,21 @@ def chrome_trace(spans: Sequence[PrefetchSpan], *, clock: str = "wall",
                          "stall_s": span.stall_s,
                          "re_predicted": span.re_predicted},
             })
+        # flow arrow prediction -> load landing -> demand use: only spans
+        # whose prefetch actually met a demand access get one (hit/partial);
+        # the three events share this span's numeric id, which is what
+        # Perfetto keys the arrow rendering on
+        if (span.kind == "prefetch" and span.outcome in ("hit", "partial")
+                and span.predicted_t is not None and span.outcome_t is not None):
+            flow = {"name": name, "cat": "prefetch,flow", "id": flow_id,
+                    "pid": pid, "tid": tid}
+            events.append({**flow, "ph": "s",
+                           "ts": _us(span.predicted_t, t0)})
+            if span.load_done_t is not None:
+                events.append({**flow, "ph": "t",
+                               "ts": _us(span.load_done_t, t0)})
+            events.append({**flow, "ph": "f", "bp": "e",
+                           "ts": _us(span.outcome_t, t0)})
 
     for marker in instants:
         pid = max(int(marker.get("service", -1)), 0)
@@ -214,9 +233,36 @@ def validate_chrome_trace(obj) -> list[str]:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 problems.append(f"event {i}: X event with bad dur {dur!r}")
+        if ev.get("ph") in ("s", "t", "f") and not isinstance(ev.get("id"), int):
+            problems.append(
+                f"event {i}: flow event ({ev.get('ph')}) without a numeric id")
         if len(problems) > 20:
             problems.append("... (truncated)")
             break
+    return problems
+
+
+def validate_flow_pairing(obj) -> list[str]:
+    """Flow-arrow consistency: every flow id must open with an ``"s"``,
+    close with at most one ``"f"``, and run monotone in time — a dangling
+    ``"t"``/``"f"`` renders as an arrow from nowhere in Perfetto."""
+    problems: list[str] = []
+    flows: dict[int, dict[str, list[float]]] = {}
+    for ev in obj.get("traceEvents", []):
+        ph = ev.get("ph")
+        if ph not in ("s", "t", "f"):
+            continue
+        by_ph = flows.setdefault(ev.get("id"), {"s": [], "t": [], "f": []})
+        by_ph[ph].append(ev.get("ts", 0.0))
+    for fid, by_ph in sorted(flows.items(), key=lambda kv: (kv[0] is None, kv[0])):
+        if len(by_ph["s"]) != 1:
+            problems.append(f"flow {fid}: {len(by_ph['s'])} start events (want 1)")
+            continue
+        if len(by_ph["f"]) > 1:
+            problems.append(f"flow {fid}: {len(by_ph['f'])} finish events (want <= 1)")
+        chain = by_ph["s"] + sorted(by_ph["t"]) + by_ph["f"]
+        if any(b < a for a, b in zip(chain, chain[1:])):
+            problems.append(f"flow {fid}: non-monotone timestamps {chain}")
     return problems
 
 
@@ -243,7 +289,7 @@ def write_chrome_trace(path, spans: Sequence[PrefetchSpan], *,
     so a benchmark can't silently publish a broken timeline."""
     trace = chrome_trace(spans, clock=clock, counters=counters,
                          instants=instants, process_names=process_names)
-    problems = validate_chrome_trace(trace)
+    problems = validate_chrome_trace(trace) + validate_flow_pairing(trace)
     if problems:
         raise ValueError(f"invalid chrome trace: {problems[:5]}")
     with open(path, "w") as fh:

@@ -88,6 +88,15 @@ class SessionConfig:
     markov_fanout: int = 8
     markov_chain: int = 4
     warm_trace: Optional[list] = None  # recorded ObjectStore.trace to mine
+    # static-optimizer signals (core.opt annotations on the hints):
+    # rfo=False ignores read-for-ownership marks (prefetches never
+    # dirty-allocate — the A/B control for the write-path experiment);
+    # max_outstanding > 0 arms the runtime's admission control, shedding
+    # batches below admission_threshold priority once that many tasks are
+    # outstanding
+    rfo: bool = True
+    max_outstanding: int = 0
+    admission_threshold: float = 0.0
     # observability label: spans and registry sources this session creates
     # carry it (the per-tenant label scheme the future loadgen item will
     # drive; see DESIGN.md section 3.7)
@@ -105,7 +114,11 @@ class Session:
                 f"unknown dispatch mode {self.config.dispatch!r}; "
                 f"expected one of {DISPATCH_MODES}"
             )
-        self.runtime = PrefetchRuntime(parallel_workers=self.config.parallel_workers)
+        self.runtime = PrefetchRuntime(
+            parallel_workers=self.config.parallel_workers,
+            max_outstanding=self.config.max_outstanding,
+            admission_threshold=self.config.admission_threshold,
+        )
         # the store drains registered runtimes in reset_runtime_state so
         # straggler prefetch tasks cannot leak across benchmark repetitions
         store.register_runtime(self.runtime)

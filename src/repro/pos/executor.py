@@ -29,9 +29,11 @@ from concurrent.futures import ThreadPoolExecutor
 
 
 class PrefetchRuntime:
-    def __init__(self, parallel_workers: int = 8):
+    def __init__(self, parallel_workers: int = 8,
+                 max_outstanding: int = 0, admission_threshold: float = 0.0):
         self._scheduler = ThreadPoolExecutor(max_workers=1, thread_name_prefix="prefetch-sched")
         self._pool = ThreadPoolExecutor(max_workers=parallel_workers, thread_name_prefix="prefetch-par")
+        self.parallel_workers = parallel_workers
         self._outstanding = 0
         self._lock = threading.Lock()
         self._idle = threading.Event()
@@ -39,6 +41,15 @@ class PrefetchRuntime:
         self._futures: set = set()
         self.scheduled = 0
         self.submitted_tasks = 0  # every executor submission (sched + pool)
+        # admission control (static-optimizer priority signal): when more
+        # than ``max_outstanding`` tasks are outstanding, only batches whose
+        # priority clears ``admission_threshold`` are admitted — the
+        # expensive tail is shed instead of queueing unboundedly.
+        # max_outstanding == 0 disables shedding (the default: the paper's
+        # runtime never drops work).
+        self.max_outstanding = max_outstanding
+        self.admission_threshold = admission_threshold
+        self.admission_dropped = 0  # batches shed by admission control
 
     # -- task accounting -----------------------------------------------------
 
@@ -82,7 +93,24 @@ class PrefetchRuntime:
                 "scheduled": self.scheduled,
                 "submitted_tasks": self.submitted_tasks,
                 "outstanding": self._outstanding,
+                "admission_dropped": self.admission_dropped,
             }
+
+    def admit(self, priority: float = 0.0) -> bool:
+        """Admission decision for a prefetch batch carrying a static
+        ``priority`` (core.opt's cost model, higher = cheaper/sooner
+        demanded).  Always True while the runtime has headroom; once
+        ``max_outstanding`` tasks are outstanding only priorities >=
+        ``admission_threshold`` get in."""
+        if not self.max_outstanding:
+            return True
+        with self._lock:
+            if self._outstanding < self.max_outstanding:
+                return True
+            if priority >= self.admission_threshold:
+                return True
+            self.admission_dropped += 1
+            return False
 
     def schedule(self, fn) -> None:
         """Submit a generated prefetch method to the background executor

@@ -131,6 +131,7 @@ class DataService:
         self.batch_dispatches = 0  # prefetch tasks submitted for this service
         self.dedup_suppressed = 0  # oids suppressed pre-submission (cached/in-flight/dup)
         self.demand_steals = 0  # lane-claimed oids a demand access took over
+        self.rfo_prefetches = 0  # prefetch loads dirty-allocated (read-for-ownership)
         # set by the owning ObjectStore so flush/eviction events land on
         # the shared StoreMetrics too (None for a standalone DataService)
         self._owner: Optional["ObjectStore"] = None
@@ -207,6 +208,7 @@ class DataService:
         self.batch_dispatches = 0
         self.dedup_suppressed = 0
         self.demand_steals = 0
+        self.rfo_prefetches = 0
         self.policy.protected_evictions = 0
 
     def is_cached(self, oid: int) -> bool:
@@ -237,12 +239,16 @@ class DataService:
                 self._demand_clear.set()
         return _SlotRelease(self._slots)
 
-    def load_into_memory(self, oid: int, prefetch: bool = False) -> bool:
+    def load_into_memory(self, oid: int, prefetch: bool = False,
+                         rfo: bool = False) -> bool:
         """Disk -> memory. Returns True if this call performed the disk load
         (False: cached, or coalesced onto an in-flight load).  ``prefetch``
         marks the touch as prefetch-path for the eviction policy (a
         prefetch-aware policy must not count it as the application *using*
-        the line).  Raises :class:`ServiceCrashed` on a dead service.
+        the line).  ``rfo`` (prefetch only) dirty-allocates the line on
+        landing — read-for-ownership for a statically-known update site, so
+        the later write finds the line already owned.  Raises
+        :class:`ServiceCrashed` on a dead service.
 
         Demand steal: if the oid is claimed by a batch lane that has not
         started loading it (``lane_pending`` on the in-flight event), a
@@ -312,6 +318,9 @@ class DataService:
                 if not self.alive:
                     raise ServiceCrashed(self.ds_id)
                 flushes = self._touch(oid, prefetch=prefetch)
+                if rfo and prefetch:
+                    self.dirty.add(oid)
+                    self.rfo_prefetches += 1
         finally:
             with self._cache_lock:
                 self._inflight.pop(oid, None)
@@ -385,7 +394,7 @@ class DataService:
         return todo
 
     def load_batch(self, oids: Iterable[int], prefetch: bool = True,
-                   pool=None) -> None:
+                   pool=None, rfo: frozenset = frozenset()) -> None:
         """Load a batch of objects disk -> memory in request order,
         pipelining through this service's ``parallel_per_ds`` slots: with a
         pool, the batch splits into one lane per slot (strided, so the
@@ -393,22 +402,24 @@ class DataService:
         calling worker drains the batch alone.  Unlike the per-oid path
         there is no per-object task submission and no store-wide
         metrics-lock traffic — landing a load costs one cache-lock
-        acquisition (policy touch + in-flight clear together)."""
+        acquisition (policy touch + in-flight clear together).  Oids in
+        ``rfo`` dirty-allocate on landing (read-for-ownership)."""
         oids = list(oids)
         lanes = max(1, min(self.latency.parallel_per_ds, len(oids)))
         if pool is not None and lanes > 1:
             for i in range(1, lanes):
-                pool.submit(self._load_lane, oids[i::lanes], prefetch, i)
-            self._load_lane(oids[0::lanes], prefetch, 0)
+                pool.submit(self._load_lane, oids[i::lanes], prefetch, i, rfo)
+            self._load_lane(oids[0::lanes], prefetch, 0, rfo)
         else:
-            self._load_lane(oids, prefetch)
+            self._load_lane(oids, prefetch, rfo=rfo)
 
     #: loads claimed/slept/landed per lane iteration: one slot hold, one
     #: claim lock, one land lock per chunk (instead of per oid); bounds how
     #: long a demand access coalescing onto a claimed oid can wait
     _LANE_CHUNK = 4
 
-    def _load_lane(self, oids: list[int], prefetch: bool, lane: int = 0) -> None:
+    def _load_lane(self, oids: list[int], prefetch: bool, lane: int = 0,
+                   rfo: frozenset = frozenset()) -> None:
         """One pipeline lane of a batched load: claim a chunk under one
         lock, occupy a disk arm for the chunk's sequential loads, land the
         chunk under one lock.  Oids that became resident (or in flight
@@ -426,7 +437,7 @@ class DataService:
         pending = list(oids)
         while pending:
             if not self.alive:
-                self._abort_lane(pending)
+                self._abort_lane(pending, rfo)
                 return
             # the lane re-acquires the slot back-to-back; without this
             # yield a waiting demand load would lose every race for it
@@ -474,13 +485,16 @@ class DataService:
                         flushes.extend(self._touch(oid, prefetch=prefetch))
                         self._inflight.pop(oid, None)
                         self.prefetch_loads += 1
+                        if oid in rfo:
+                            self.dirty.add(oid)
+                            self.rfo_prefetches += 1
             except ServiceCrashed:
                 with self._cache_lock:
                     for oid, _ev in chunk:
                         self._inflight.pop(oid, None)
                 for _oid, ev in chunk:
                     ev.set()
-                self._abort_lane([oid for oid, _ev in chunk] + pending)
+                self._abort_lane([oid for oid, _ev in chunk] + pending, rfo)
                 return
             except BaseException:
                 with self._cache_lock:
@@ -499,15 +513,16 @@ class DataService:
                 vds._flush(victim)
             self._beat()
 
-    def _abort_lane(self, oids: list[int]) -> None:
+    def _abort_lane(self, oids: list[int], rfo: frozenset = frozenset()) -> None:
         """This service died mid-batch: hand every claimed-but-unlanded and
         still-pending oid back to the store, which re-dispatches them to a
         surviving replica (a no-op for a standalone service or when no
-        replica is left — the demand path then eats the miss)."""
+        replica is left — the demand path then eats the miss).  RFO marks
+        survive the re-dispatch."""
         if not oids or self._owner is None:
             return
         self._owner._note_service_down(self.ds_id)
-        self._owner._failover_redispatch(self.ds_id, oids)
+        self._owner._failover_redispatch(self.ds_id, oids, rfo=rfo)
 
     def write(self, oid: int) -> bool:
         """Write-allocate + write-back: ensure the object is in memory (a
@@ -569,6 +584,7 @@ PREFETCH_COUNTERS = (
     "batch_dispatches",
     "dedup_suppressed",
     "demand_steals",
+    "rfo_prefetches",
 )
 
 
@@ -918,12 +934,14 @@ class ObjectStore:
 
     # -- prefetch-path access ----------------------------------------------
 
-    def prefetch_access(self, oid: int, origin: str = "") -> PersistentObject:
+    def prefetch_access(self, oid: int, origin: str = "",
+                        rfo: bool = False) -> PersistentObject:
         """Per-oid prefetch: load ``oid`` into its own Data Service's memory
         (no execution redirection: 'dataClay ... loads the object where it
         is stored').  This is the legacy one-task-per-oid dispatch target
         (``dispatch="per-oid"``); each call was one executor submission, so
-        it also counts one ``batch_dispatches``."""
+        it also counts one ``batch_dispatches``.  ``rfo`` dirty-allocates
+        the line (the static optimizer marked it a known update site)."""
         with self._prefetch_lock:
             self.prefetched_oids.add(oid)
         ds = self._route_prefetch(oid)
@@ -936,10 +954,11 @@ class ObjectStore:
             t_q = time.perf_counter()
             tr.claimed([oid], ds.ds_id, t=t_q)
         try:
-            did_load = ds.load_into_memory(oid, prefetch=True)
+            did_load = ds.load_into_memory(oid, prefetch=True, rfo=rfo)
         except ServiceCrashed:
             self._note_service_down(ds.ds_id)
-            self._failover_redispatch(ds.ds_id, [oid])
+            self._failover_redispatch(
+                ds.ds_id, [oid], rfo=frozenset([oid]) if rfo else frozenset())
             return self.record(oid)
         if tr is not None:
             if did_load:
@@ -956,7 +975,8 @@ class ObjectStore:
         return ds.disk[oid]
 
     def prefetch_batch(self, oids: Iterable[int], runtime=None,
-                       origin: str = "") -> int:
+                       origin: str = "", rfo: Iterable[int] = (),
+                       priorities: Optional[dict[int, float]] = None) -> int:
         """Batched, placement-aware prefetch dispatch: group the predicted
         ``oids`` (already in predicted-need order) by owning Data Service,
         dedupe each group against that service's cache *and* in-flight loads
@@ -968,11 +988,19 @@ class ObjectStore:
         Without a ``runtime`` the batches load on the calling thread.
         Returns the number of batch tasks submitted.
 
+        Static-optimizer signals: oids in ``rfo`` dirty-allocate on landing
+        (read-for-ownership); ``priorities`` (oid -> static dispatch
+        priority) orders the per-service groups most-valuable-first and
+        feeds the runtime's admission control — a saturated runtime sheds
+        the cheap-to-skip expensive tail (``runtime.admit``) instead of
+        queueing unboundedly.
+
         Under replication the grouping routes each oid to its best replica
         (cached/least-queued), and a batch that lands on a service that
         crashed between routing and claiming is re-dispatched to the
         survivors instead of being lost."""
         oids = list(oids)
+        rfo = frozenset(rfo)
         groups: dict[int, list[int]] = {}
         skipped = 0
         for oid in oids:
@@ -985,19 +1013,33 @@ class ObjectStore:
             self.prefetched_oids.update(oids)
         if not groups:
             return 0
+        ordered = list(groups.items())
+        if priorities:
+            # highest-priority group first (stable on the original
+            # predicted-need grouping order for ties)
+            ordered.sort(key=lambda kv: -max(
+                (priorities.get(o, 0.0) for o in kv[1]), default=0.0))
         tr = self.obs.tracer if self.obs is not None else None
         submitted = 0
-        for ds_id, batch in groups.items():
+        for ds_id, batch in ordered:
             ds = self.services[ds_id]
             if tr is not None:
                 tr.predicted(batch, origin)
+            if runtime is not None and priorities is not None:
+                prio = max((priorities.get(o, 0.0) for o in batch),
+                           default=0.0)
+                if not runtime.admit(prio):
+                    if tr is not None:
+                        tr.dropped(batch, "admission")
+                    continue
+            if tr is not None:
                 tr.dispatched(batch, ds_id, tr.new_batch())
             try:
                 todo = ds.claim_prefetch_batch(batch)
             except ServiceCrashed:
                 self._note_service_down(ds_id)
-                self._failover_redispatch(ds_id, batch,
-                                          runtime=runtime, origin=origin)
+                self._failover_redispatch(ds_id, batch, runtime=runtime,
+                                          origin=origin, rfo=rfo)
                 continue
             if tr is not None:
                 if todo:
@@ -1009,10 +1051,11 @@ class ObjectStore:
             if not todo:
                 continue
             submitted += 1
+            todo_rfo = rfo.intersection(todo)
             if runtime is not None:
-                runtime.submit(ds.load_batch, todo, True, runtime)
+                runtime.submit(ds.load_batch, todo, True, runtime, todo_rfo)
             else:
-                ds.load_batch(todo)
+                ds.load_batch(todo, rfo=todo_rfo)
         return submitted
 
     def peek(self, oid: int) -> PersistentObject:
@@ -1080,12 +1123,13 @@ class ObjectStore:
             tr.instant("straggler-flagged", service=ds_id)
 
     def _failover_redispatch(self, from_ds: int, oids: list[int],
-                             runtime=None, origin: str = "failover") -> int:
+                             runtime=None, origin: str = "failover",
+                             rfo: frozenset = frozenset()) -> int:
         """Re-dispatch prefetch oids that were claimed by (or headed for) a
         service that died before landing them.  Routing now avoids the dead
         service, so the batch re-groups onto surviving replicas; with
         replication 1 there is nowhere to go and the oids fall back to
-        demand misses."""
+        demand misses.  RFO marks survive the re-dispatch."""
         if not oids:
             return 0
         with self._metrics_lock:
@@ -1095,7 +1139,8 @@ class ObjectStore:
             tr.dropped(oids, "service-crash")
             tr.instant("prefetch-failover", service=from_ds, oids=len(oids))
         return self.prefetch_batch(oids, runtime=runtime,
-                                   origin=origin or "failover")
+                                   origin=origin or "failover",
+                                   rfo=rfo.intersection(oids))
 
     # -- bookkeeping ---------------------------------------------------------
 

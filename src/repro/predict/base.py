@@ -60,6 +60,11 @@ class Overhead:
     # before submission because they were already cached / in flight
     batch_dispatches: int = 0
     dedup_suppressed: int = 0
+    # static-optimizer accounting (core.opt annotations): prefetches issued
+    # read-for-ownership (dirty-allocated ahead of a known update site), and
+    # collection expansions clipped to their static prefix bound
+    rfo_prefetches: int = 0
+    truncated_hints: int = 0
     # instrumentation self-accounting (repro.obs): what the observability
     # layer itself cost this run — charged here so CAPre's zero-overhead
     # claim stays falsifiable *with the instruments attached*
@@ -93,6 +98,12 @@ class Predictor:
         self.reg = None  # pos.client.RegisteredApp (schema + analysis)
         self.overhead = Overhead()
         self._installed_listeners: list[tuple[str, object]] = []
+        # offline emission metadata (static-optimizer signals) accumulated
+        # by _emit between take_emission_meta() calls — the replay harness
+        # reads it so the virtual clock sees the same rfo/priority stream
+        # the live dispatch path gets
+        self._pending_rfo: set[int] = set()
+        self._pending_priorities: dict[int, float] = {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -172,22 +183,51 @@ class Predictor:
         cfg = self.session.config if self.session is not None else None
         return getattr(cfg, "dispatch", "batch")
 
-    def _emit(self, oids: Iterable[int], context: str = "") -> list[int]:
+    def _emit(self, oids: Iterable[int], context: str = "",
+              rfo: frozenset = frozenset(),
+              priorities: Optional[dict] = None) -> list[int]:
         """Account predictions; when bound, dispatch their loads on the
         session's background runtime — batched per Data Service by default,
         or one pool task per oid in "per-oid" mode.  ``context`` names the
         point in the program that triggered the prediction (method key /
-        hint node); spans carry it as ``origin = "<predictor>:<context>"``."""
+        hint node); spans carry it as ``origin = "<predictor>:<context>"``.
+
+        ``rfo`` oids dirty-allocate on landing and ``priorities``
+        (oid -> static dispatch priority) orders/gates batched dispatch —
+        the static-optimizer signals (core.opt).  Offline (no session) the
+        metadata accumulates for ``take_emission_meta``."""
         out = [o for o in oids]
         self.overhead.predictions += len(out)
-        if out and self.session is not None:
-            store = self.session.store
-            origin = f"{self.name}:{context}" if context else self.name
-            if self._dispatch_mode() == "batch":
-                store.prefetch_batch(out, runtime=self.session.runtime,
-                                     origin=origin)
-            else:
-                self.session.runtime.fan_out(
-                    lambda oid: store.prefetch_access(oid, origin=origin), out
-                )
+        if not out:
+            return out
+        if self.session is None:
+            self._pending_rfo.update(rfo)
+            if priorities:
+                self._pending_priorities.update(priorities)
+            return out
+        cfg = self.session.config
+        if not getattr(cfg, "rfo", True):
+            rfo = frozenset()
+        store = self.session.store
+        origin = f"{self.name}:{context}" if context else self.name
+        if self._dispatch_mode() == "batch":
+            store.prefetch_batch(out, runtime=self.session.runtime,
+                                 origin=origin, rfo=rfo,
+                                 priorities=priorities or None)
+        else:
+            self.session.runtime.fan_out(
+                lambda oid: store.prefetch_access(oid, origin=origin,
+                                                  rfo=oid in rfo), out
+            )
         return out
+
+    def take_emission_meta(self) -> tuple[frozenset, dict]:
+        """Drain the static-optimizer metadata accumulated by offline
+        ``_emit`` calls since the last drain: ``(rfo_oids, priorities)``.
+        The replay harness calls this after each ``on_*`` hook so the
+        virtual dispatch sees the same signals the live path gets."""
+        rfo = frozenset(self._pending_rfo)
+        priorities = dict(self._pending_priorities)
+        self._pending_rfo.clear()
+        self._pending_priorities.clear()
+        return rfo, priorities

@@ -416,7 +416,8 @@ class VirtualReplay:
 
     def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
                  policy: str = DEFAULT_POLICY, shared_budget: bool = False,
-                 dispatch: str = "per-oid", tracer=None, scenario=None):
+                 dispatch: str = "per-oid", tracer=None, scenario=None,
+                 rfo_enabled: bool = True, executor_workers: int = 8):
         from repro.obs import Histogram, Meter
 
         n = len(store.services)
@@ -476,6 +477,25 @@ class VirtualReplay:
         self.flushed_writes = 0
         self.batch_dispatches = 0  # executor submissions the predictions cost
         self.dedup_suppressed = 0  # oids suppressed before submission (batch mode)
+        # -- static-optimizer signals (core.opt) ----------------------------
+        # rfo_enabled=False ignores read-for-ownership marks (the A/B
+        # control): predictions then never dirty-allocate, and every write
+        # to a resident-but-clean line pays the ownership upgrade below
+        self.rfo_enabled = rfo_enabled
+        self.rfo_prefetches = 0  # prefetch loads landed dirty (RFO)
+        self.ownership_upgrades = 0  # writes to resident-but-clean lines
+        self._rfo_pending: list[set[int]] = [set() for _ in range(n)]
+        # priority stream accounting (mean static priority of the emitted
+        # predictions — the bench/compare artifact column)
+        self._prio_sum = 0.0
+        self._prio_n = 0
+        # bounded prefetch-executor pool mirroring the live PrefetchRuntime
+        # (parallel_workers=8): a dispatch task occupies a worker slot from
+        # its issue until its loads are ready — when predictions outpace the
+        # pool, later dispatches queue behind busy workers instead of
+        # issuing instantly (the saturation the wall-clock benches hit)
+        self._exec_slots = [0.0] * max(1, executor_workers)
+        self.exec_delayed = 0  # dispatches that waited for a free worker
         self._evicted_ever: set[int] = set()
         # observability (repro.obs): the virtual clock affords an *exact*
         # per-demand-event stall distribution (every event records 0.0 on a
@@ -494,13 +514,36 @@ class VirtualReplay:
 
     def _materialize(self, ds_i: int, t: float) -> None:
         """Promote in-flight loads that completed by ``t`` to resident, in
-        completion order (so LRU age matches the virtual timeline)."""
+        completion order (so LRU age matches the virtual timeline).  An
+        RFO-marked load lands dirty: the line is owned for writing the
+        moment it becomes resident."""
         landed = sorted(
             (done, oid) for oid, (_start, done) in self.inflight[ds_i].items() if done <= t
         )
         for _done, oid in landed:
             del self.inflight[ds_i][oid]
             self._insert(ds_i, oid, "pf")
+            self._land_rfo(ds_i, oid)
+
+    def _land_rfo(self, ds_i: int, oid: int) -> None:
+        """Dirty-allocate a just-landed prefetch if it was issued RFO."""
+        if oid not in self._rfo_pending[ds_i]:
+            return
+        self._rfo_pending[ds_i].discard(oid)
+        entry = self.caches[ds_i].get(oid)
+        if entry is not None:
+            entry.dirty = True
+        self.rfo_prefetches += 1
+
+    def _exec_issue(self, req_t: float) -> tuple[int, float]:
+        """Claim the earliest-free prefetch-executor worker for a dispatch
+        requested at ``req_t``: returns ``(slot, issue_t)`` where the issue
+        waits out the pool when every worker is busy."""
+        i = min(range(len(self._exec_slots)), key=self._exec_slots.__getitem__)
+        issue = max(req_t, self._exec_slots[i])
+        if issue > req_t:
+            self.exec_delayed += 1
+        return i, issue
 
     @property
     def protected_evictions(self) -> int:
@@ -638,22 +681,33 @@ class VirtualReplay:
 
     # -- the two event kinds -------------------------------------------------
 
-    def predict(self, oids: Sequence[int], origin: str = "") -> None:
+    def predict(self, oids: Sequence[int], origin: str = "",
+                rfo: frozenset = frozenset(),
+                priorities: Optional[dict] = None) -> None:
         """Predictor emitted ``oids`` at the current virtual time: schedule
         a disk load on each one's own Data Service unless already resident
         or in flight (request coalescing).  Dispatch overhead charges at
         the configured granularity — per oid, or per Data-Service batch —
         by delaying the *issue* time of the loads (the submitting side
         serializes task starts; the application clock itself is not
-        advanced, prefetch dispatch runs on background threads)."""
+        advanced, prefetch dispatch runs on background threads), and every
+        dispatch additionally queues for one of the bounded executor-pool
+        workers.  ``rfo`` oids land dirty (read-for-ownership);
+        ``priorities`` orders batched per-service dispatch and feeds the
+        mean-priority artifact column."""
         self._maybe_crash()
+        if not self.rfo_enabled:
+            rfo = frozenset()
+        if priorities:
+            self._prio_sum += sum(priorities.values())
+            self._prio_n += len(priorities)
         if self.dispatch == "batch":
-            self._predict_batched(oids, origin=origin)
+            self._predict_batched(oids, origin=origin, rfo=rfo,
+                                  priorities=priorities)
             return
         tr = self.tracer
         overhead = self.latency.dispatch_overhead
         for i, oid in enumerate(oids):
-            issue_t = self.t + (i + 1) * overhead
             ds_i = self._route_prefetch(oid)
             if ds_i is None:
                 continue  # no reachable replica: skip, demand surfaces it
@@ -677,29 +731,41 @@ class VirtualReplay:
                 if tr is not None:
                     tr.suppressed([oid], ds_i, t=self.t)
                 continue
+            slot, issue_t = self._exec_issue(self.t + (i + 1) * overhead)
             start, done = self.disks[ds_i].schedule(issue_t)
+            self._exec_slots[slot] = done  # worker busy until the load lands
             self.inflight[ds_i][oid] = (start, done)
+            if oid in rfo:
+                self._rfo_pending[ds_i].add(oid)
             self.prefetch_loads += 1
             if tr is not None:
                 tr.claimed([oid], ds_i, t=issue_t)
                 tr.loaded([oid], ds_i, self.disks[ds_i].last_slot,
                           issue_t, start, done)
 
-    def _predict_batched(self, oids: Sequence[int], origin: str = "") -> None:
+    def _predict_batched(self, oids: Sequence[int], origin: str = "",
+                         rfo: frozenset = frozenset(),
+                         priorities: Optional[dict] = None) -> None:
         """The batched mirror of ``ObjectStore.prefetch_batch``: group by
         owning Data Service in predicted-need order, dedupe each group
         against residency and in-flight loads before submission, then issue
-        the surviving loads as one pipelined batch on the service's disk."""
+        the surviving loads as one pipelined batch on the service's disk.
+        With ``priorities`` the groups dispatch highest-priority-first
+        (the live path orders identically)."""
         groups: dict[int, list[int]] = {}
         for oid in oids:
             ds_i = self._route_prefetch(oid)
             if ds_i is None:
                 continue  # no reachable replica: skip, demand surfaces it
             groups.setdefault(ds_i, []).append(oid)
+        ordered = list(groups.items())
+        if priorities:
+            ordered.sort(key=lambda kv: -max(
+                (priorities.get(o, 0.0) for o in kv[1]), default=0.0))
         tr = self.tracer
         overhead = self.latency.dispatch_overhead
         submitted = 0
-        for ds_i, batch in groups.items():
+        for ds_i, batch in ordered:
             self._materialize(ds_i, self.t)
             if tr is not None:
                 tr.predicted(batch, origin, t=self.t)
@@ -725,15 +791,23 @@ class VirtualReplay:
                 continue
             submitted += 1
             self.batch_dispatches += 1
-            issue_t = self.t + submitted * overhead
+            slot, issue_t = self._exec_issue(self.t + submitted * overhead)
             disk = self.disks[ds_i]
+            batch_done = issue_t
             for oid in todo:
                 start, done = disk.schedule(issue_t)
+                batch_done = max(batch_done, done)
                 self.inflight[ds_i][oid] = (start, done)
+                if oid in rfo:
+                    self._rfo_pending[ds_i].add(oid)
                 self.prefetch_loads += 1
                 if tr is not None:
                     tr.claimed([oid], ds_i, t=issue_t)
                     tr.loaded([oid], ds_i, disk.last_slot, issue_t, start, done)
+            # the batch task occupies its executor worker until its last
+            # load is ready (claim + slot wait + disk service, like the
+            # live _load_lane worker)
+            self._exec_slots[slot] = batch_done
 
     def access(self, oid: int, write: bool = False) -> None:
         """Application touches ``oid`` (read navigation, or field update
@@ -758,6 +832,7 @@ class VirtualReplay:
         disk_s = self.disks[ds_i]._disk_load
         cache = self.caches[ds_i]
         entry = cache.get(oid)
+        owned = False  # did this very access acquire write ownership?
         if entry is not None:
             # resident: ready-at <= needed-at. Timely iff prefetching (not a
             # prior demand load) put it there.
@@ -783,6 +858,7 @@ class VirtualReplay:
             self.partial += 1
             self._insert(ds_i, oid, "pf", used=True)
             entry = self.caches[ds_i].get(oid)
+            self._land_rfo(ds_i, oid)  # an RFO load lands dirty (owned)
             self.stall_hist.record(stall)
             if tr is not None:
                 tr.demand(oid, ds_i, needed_at, stall, False,
@@ -799,11 +875,19 @@ class VirtualReplay:
                 self.thrash_misses += 1
             self._insert(ds_i, oid, "demand", used=True)
             entry = self.caches[ds_i].get(oid)
+            owned = True  # write-allocate acquires ownership with the load
             self.stall_hist.record(stall)
             if tr is not None:
                 tr.demand(oid, ds_i, needed_at, stall, True,
                           disk_s, t=done)
         if write and entry is not None:
+            if not entry.dirty and not owned:
+                # ownership upgrade: writing a resident-but-clean line pays
+                # a round trip to acquire write ownership on the app clock —
+                # the cost an RFO prefetch (dirty-allocated landing) removes
+                self.t += self.latency.remote_hop
+                self.stall_seconds += self.latency.remote_hop
+                self.ownership_upgrades += 1
             entry.dirty = True
         self.t += self.latency.think
 
@@ -899,6 +983,7 @@ def replay(
     tracer=None,
     calibration=None,
     scenario=None,
+    rfo: bool = True,
 ) -> ReplayResult:
     """Drive ``predictor`` through the recorded event stream on the virtual
     clock and score what its prefetches would have hidden.  Pass a
@@ -911,7 +996,7 @@ def replay(
     predictor.attach(store, reg)
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
                            policy=policy, shared_budget=shared_budget, dispatch=dispatch,
-                           tracer=tracer, scenario=scenario)
+                           tracer=tracer, scenario=scenario, rfo_enabled=rfo)
     name = predictor.name
     predicted: set[int] = set()
     accessed: set[int] = set()
@@ -920,7 +1005,9 @@ def replay(
         if ev.kind == METHOD_ENTRY:
             out = predictor.on_method_entry(ev.method_key, ev.oid)
             predicted.update(out)
-            engine.predict(out, origin=f"{name}:{ev.method_key}")
+            rfo_oids, priorities = predictor.take_emission_meta()
+            engine.predict(out, origin=f"{name}:{ev.method_key}",
+                           rfo=rfo_oids, priorities=priorities or None)
         else:
             oid = ev.oid
             n_access += 1
@@ -934,7 +1021,9 @@ def replay(
                 engine.access(oid)
                 out = predictor.on_access(oid, store.cls_of(oid))
             predicted.update(out)
-            engine.predict(out, origin=f"{name}:on_access")
+            rfo_oids, priorities = predictor.take_emission_meta()
+            engine.predict(out, origin=f"{name}:on_access",
+                           rfo=rfo_oids, priorities=priorities or None)
     if tracer is not None:
         # lifecycle invariant at end of run: still-active spans (predicted
         # or resident-but-never-demanded) terminate as dropped
@@ -959,6 +1048,15 @@ def replay(
     overhead["protected_evictions"] = engine.protected_evictions
     overhead["batch_dispatches"] = engine.batch_dispatches
     overhead["dedup_suppressed"] = engine.dedup_suppressed
+    # static-optimizer accounting on the virtual clock: RFO prefetch
+    # landings, write-to-clean ownership upgrades the app paid anyway,
+    # modeled executor-pool waits, and the mean static priority seen
+    overhead["rfo_prefetches"] = engine.rfo_prefetches
+    overhead["ownership_upgrades"] = engine.ownership_upgrades
+    overhead["exec_delayed"] = engine.exec_delayed
+    overhead["hint_priority_mean"] = (
+        round(engine._prio_sum / engine._prio_n, 4) if engine._prio_n else 0.0
+    )
     # what the instruments themselves cost this replay (histogram recording
     # + span bookkeeping), charged to the ledger like any other overhead
     overhead["obs_seconds"] = engine.obs_meter.seconds
@@ -1031,6 +1129,7 @@ def evaluate_workload(
     placement: str = "round-robin",
     replication: int = 1,
     scenarios: Sequence[str] = ("no-fault",),
+    rfo: bool = True,
 ) -> list[ReplayResult]:
     """Record (train + eval runs), then replay every requested predictor
     under every (cache capacity, eviction policy, dispatch mode, failure
@@ -1095,6 +1194,7 @@ def evaluate_workload(
                                 baseline_stall_seconds=baseline,
                                 calibration=calibration,
                                 scenario=scenario,
+                                rfo=rfo,
                             )
                         )
     return results
@@ -1115,6 +1215,7 @@ def evaluate_apps(
     placement: str = "round-robin",
     replication: int = 1,
     scenarios: Sequence[str] = ("no-fault",),
+    rfo: bool = True,
 ) -> list[ReplayResult]:
     """``calibrated=True`` replays each app under its calibrated latency
     model (``calibration.calibrated_model``) instead of the raw REPLAY
@@ -1161,6 +1262,7 @@ def evaluate_apps(
                 placement=placement,
                 replication=replication,
                 scenarios=scenarios,
+                rfo=rfo,
             )
         )
     return out
@@ -1225,6 +1327,14 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     # _COLUMNS): keyed rows stay unique on the legacy key at the defaults
     "replication",
     "failovers",
+    # static-optimizer columns (core.opt): read-for-ownership landings,
+    # prefix-clipped collection expansions, mean static dispatch priority,
+    # write-to-clean ownership round trips, and modeled executor-pool waits
+    "rfo_prefetches",
+    "truncated_hints",
+    "hint_priority_mean",
+    "ownership_upgrades",
+    "exec_delayed",
 )
 
 
@@ -1294,6 +1404,10 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="replay each app under its calibrated latency model "
                          "(fitted scales from artifacts/predict/calibration.csv) "
                          "so virtual stalls read directly as predicted wall seconds")
+    ap.add_argument("--no-rfo", action="store_true",
+                    help="ignore read-for-ownership hint marks: prefetches "
+                         "land clean and writes to them pay the ownership "
+                         "round trip (the A/B control for core.opt pass 1)")
     ap.add_argument("--no-trace-cache", action="store_true",
                     help="always re-record workload traces instead of reusing "
                          "the disk-memoized ones under artifacts/predict/traces")
@@ -1318,7 +1432,7 @@ def main(argv: Optional[list[str]] = None) -> None:
         trace_cache=None if args.no_trace_cache else "default",
         calibrated=args.calibrated,
         placement=args.placement, replication=args.replication,
-        scenarios=scenarios,
+        scenarios=scenarios, rfo=not args.no_rfo,
     )
     print(format_table(results))
     if not args.no_csv:

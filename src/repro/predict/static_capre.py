@@ -24,26 +24,37 @@ from repro.core.injection import _HintTree, build_hint_tree
 from .base import Predictor, table_bytes
 
 
-def iter_hint_tree(store, root_oid: int, tree: _HintTree):
-    """Lazily yield the oids a generated prefetch method would load for
-    ``root_oid``, in traversal (= needed-at) order, over the current store
-    contents without cost accounting.  Lazy matters online: the batch
-    dispatcher streams segments off this iterator, so the head of a large
-    subtree is already loading while the tail is still being expanded —
-    expanding OO7's full design tree before dispatching anything made the
-    application demand-miss every subtree's first objects."""
+def iter_hint_tree(store, root_oid: int, tree: _HintTree, on_truncate=None):
+    """Lazily yield ``(oid, hint_node)`` pairs a generated prefetch method
+    would load for ``root_oid``, in traversal (= needed-at) order, over the
+    current store contents without cost accounting.  Lazy matters online:
+    the batch dispatcher streams segments off this iterator, so the head of
+    a large subtree is already loading while the tail is still being
+    expanded — expanding OO7's full design tree before dispatching anything
+    made the application demand-miss every subtree's first objects.
+
+    The static-optimizer annotations apply here exactly like in the
+    generated closure: siblings expand in priority order, and a collection
+    carrying a ``prefix_bound`` yields only its static prefix
+    (``on_truncate(node)`` fires once per clipped expansion)."""
     stack: list[tuple[int, _HintTree]] = [(root_oid, tree)]
     while stack:
         oid, node = stack.pop()
-        yield oid
+        yield oid, node
         rec = store.peek(oid)
         pushes: list[tuple[int, _HintTree]] = []
-        for child in node.children.values():
+        for child in node.ordered_children():
             ref = rec.fields.get(child.fld)
             if ref is None:
                 continue
             if child.card == lang.COLLECTION:
-                pushes.extend((e, child) for e in list(ref))
+                elems = list(ref)
+                if (child.prefix_bound is not None
+                        and len(elems) > child.prefix_bound):
+                    elems = elems[: child.prefix_bound]
+                    if on_truncate is not None:
+                        on_truncate(child)
+                pushes.extend((e, child) for e in elems)
             else:
                 pushes.append((ref, child))
         stack.extend(reversed(pushes))
@@ -52,7 +63,7 @@ def iter_hint_tree(store, root_oid: int, tree: _HintTree):
 def expand_hint_tree(store, root_oid: int, tree: _HintTree) -> list[int]:
     """The oids a generated prefetch method would load for ``root_oid``
     (the eager spelling of ``iter_hint_tree``)."""
-    return list(iter_hint_tree(store, root_oid, tree))
+    return [oid for oid, _node in iter_hint_tree(store, root_oid, tree)]
 
 
 class _CountingStore:
@@ -60,13 +71,14 @@ class _CountingStore:
     ``Overhead`` ledger — the generated prefetch closures cannot do it
     themselves."""
 
-    def __init__(self, store, overhead):
+    def __init__(self, store, overhead, rfo_enabled=True):
         self._store = store
         self._overhead = overhead
+        self._rfo_enabled = rfo_enabled
 
-    def prefetch_access(self, oid: int):
+    def prefetch_access(self, oid: int, rfo: bool = False):
         self._overhead.predictions += 1
-        return self._store.prefetch_access(oid)
+        return self._store.prefetch_access(oid, rfo=rfo and self._rfo_enabled)
 
     def __getattr__(self, name):
         return getattr(self._store, name)
@@ -122,14 +134,29 @@ class StaticCapre(Predictor):
                 # the generated closure is opaque: meter its prefetches
                 # through a counting proxy so the online ledger is
                 # comparable with the miners' (which count via _emit)
-                store = _CountingStore(self.session.store, self.overhead)
+                store = _CountingStore(self.session.store, self.overhead,
+                                       getattr(self.session.config, "rfo", True))
                 runtime = self.session.runtime
                 self.session.runtime.schedule(lambda: fn(store, runtime, this_oid))
             return []
         tree = self._trees.get(method_key)
         if tree is None:
             return []
-        return self._emit(expand_hint_tree(self.store, this_oid, tree))
+        oids: list[int] = []
+        rfo: set[int] = set()
+        priorities: dict[int, float] = {}
+        for oid, node in iter_hint_tree(self.store, this_oid, tree,
+                                        on_truncate=self._note_truncation):
+            oids.append(oid)
+            if node.rfo:
+                rfo.add(oid)
+            if node.priority:
+                priorities[oid] = node.priority
+        return self._emit(oids, context=method_key,
+                          rfo=frozenset(rfo), priorities=priorities)
+
+    def _note_truncation(self, _node) -> None:
+        self.overhead.truncated_hints += 1
 
     #: oids per streamed dispatch segment: large enough that executor
     #: submissions stay well below per-oid dispatch, small enough that a
@@ -173,17 +200,24 @@ class StaticCapre(Predictor):
 
     def _submit_expansion(self, roots, origin: str = "capre") -> None:
         store, runtime = self.session.store, self.session.runtime
+        rfo_enabled = getattr(self.session.config, "rfo", True)
 
         dispatched = self._dispatched if self._memo_active(store) else None
 
         def expand_job() -> None:
             seg: list[int] = []
+            seg_rfo: set[int] = set()
+            seg_prio: dict[int, float] = {}
 
             def flush() -> None:
                 if seg:
                     self.overhead.predictions += len(seg)
-                    store.prefetch_batch(seg, runtime=runtime, origin=origin)
+                    store.prefetch_batch(seg, runtime=runtime, origin=origin,
+                                         rfo=frozenset(seg_rfo),
+                                         priorities=dict(seg_prio) or None)
                     seg.clear()
+                    seg_rfo.clear()
+                    seg_prio.clear()
 
             stack = list(reversed(roots))
             while stack:
@@ -193,25 +227,37 @@ class StaticCapre(Predictor):
                 # expanded by an earlier entry, so its whole subtree is
                 # already requested (the emitted SET is unchanged — only
                 # the redundant re-walk is skipped).  Sound because an
-                # expansion never truncates: reaching a pair means its
-                # subtree under that node was pushed in the same pass.
+                # expansion never truncates past its own static bound:
+                # reaching a pair means its (bounded) subtree under that
+                # node was pushed in the same pass.
                 if dispatched is not None:
                     key = (id(node), oid)
                     if key in dispatched:
                         continue
                     dispatched.add(key)
                 seg.append(oid)
+                if rfo_enabled and node.rfo:
+                    seg_rfo.add(oid)
+                if node.priority:
+                    seg_prio[oid] = node.priority
                 if len(seg) >= self.SEGMENT:
                     flush()
                     time.sleep(0)  # yield the GIL between segments
                 rec = store.peek(oid)
                 pushes = []
-                for child in node.children.values():
+                for child in node.ordered_children():
                     ref = rec.fields.get(child.fld)
                     if ref is None:
                         continue
                     if child.card == lang.COLLECTION:
                         elems = list(ref)
+                        if (child.prefix_bound is not None
+                                and len(elems) > child.prefix_bound):
+                            # partial-traversal truncation: the loop behind
+                            # this hint provably exits early — expand only
+                            # the static prefix
+                            elems = elems[: child.prefix_bound]
+                            self.overhead.truncated_hints += 1
                         if len(elems) > self.SUBTREE_GROUP:
                             for i in range(0, len(elems), self.SUBTREE_GROUP):
                                 self._submit_expansion(

@@ -245,6 +245,206 @@ def test_replay_batch_counts_dedup_suppression():
 
 
 # ---------------------------------------------------------------------------
+# static-optimizer signals through dispatch (ISSUE 8): RFO, truncation,
+# priority ordering, admission control, modeled executor saturation
+# ---------------------------------------------------------------------------
+
+
+def _live_write_run(dispatch, rfo=True):
+    client = POSClient(n_services=4, latency=ZERO)
+    client.register(build_bank_app())
+    root = populate_bank_store(client.store, n_transactions=40)
+    with client.session("bank", mode="capre", dispatch=dispatch, rfo=rfo) as s:
+        # fire the hint dispatch directly, with no demand accesses racing
+        # the pool (executing the method at any latency makes who-loads-
+        # first a scheduling race): every prefetch actually loads, so RFO
+        # landings are exact
+        s.predictor.on_method_entry("BankManagement.setAllTransCustomers", root)
+        assert s.drain(15.0)
+    return client.store.snapshot_metrics()
+
+
+@pytest.mark.parametrize("dispatch", ["per-oid", "batch"])
+def test_live_rfo_prefetches_dirty_allocate(dispatch):
+    """Both live dispatch modes honor the hint RFO marks: prefetched update
+    sites land dirty, and the counter flows into snapshot_metrics."""
+    metrics = _live_write_run(dispatch)
+    assert metrics["prefetch_loads"] > 0
+    assert metrics["rfo_prefetches"] > 0
+    # RFO marks never change the emitted oid set itself: both modes still
+    # request byte-identical prefetch sets (checked at ZERO latency where
+    # the race with demand is moot)
+    per_oid = _run_live("per-oid", "capre", workload="setAllTransCustomers")
+    batch = _run_live("batch", "capre", workload="setAllTransCustomers")
+    assert per_oid[0] == batch[0]
+
+
+def test_live_rfo_disabled_by_session_config():
+    metrics = _live_write_run("batch", rfo=False)
+    assert metrics["prefetch_loads"] > 0
+    assert metrics["rfo_prefetches"] == 0
+
+
+def test_replay_rfo_equivalent_across_dispatch_modes():
+    """Identical emissions + identical RFO marks -> identical stall and RFO
+    accounting in both virtual dispatch modes."""
+    store, oids = _store_with(8)
+    events = ([("enter", "Obj.m", oids[0])] + [("access", o) for o in oids]
+              + [("write", o) for o in oids])
+    trace = RecordedTrace("t", "m", events, list(oids))
+
+    from repro.predict.base import Predictor
+
+    class Scripted(Predictor):
+        name = "scripted"
+
+        def on_method_entry(self, method_key, this_oid):
+            return self._emit(list(oids), rfo=frozenset(oids),
+                              priorities={o: 0.5 for o in oids})
+
+    results = {d: replay(trace, Scripted(), store, None, latency=LAT, dispatch=d)
+               for d in ("per-oid", "batch")}
+    per_oid, batch = results["per-oid"], results["batch"]
+    assert per_oid.stall_seconds == batch.stall_seconds
+    r_per, r_batch = per_oid.row(), batch.row()
+    assert r_per["rfo_prefetches"] == r_batch["rfo_prefetches"] == len(oids)
+    # every write hit a dirty-allocated line: no ownership upgrades at all
+    assert r_per["ownership_upgrades"] == r_batch["ownership_upgrades"] == 0
+    assert r_per["hint_priority_mean"] == r_batch["hint_priority_mean"] == 0.5
+
+
+def test_replay_rfo_off_pays_ownership_upgrades():
+    """The A/B control: same trace, rfo disabled -> prefetches land clean
+    and every write to a clean resident line pays the upgrade round trip."""
+    lat = LatencyModel(disk_load=10.0, remote_hop=1.0, write_back=0.0,
+                       think=0.1, parallel_per_ds=2)
+    store, oids = _store_with(6, n_services=1)
+    events = ([("enter", "Obj.m", oids[0])] + [("access", o) for o in oids]
+              + [("write", o) for o in oids])
+    trace = RecordedTrace("t", "m", events, list(oids))
+
+    from repro.predict.base import Predictor
+
+    def scripted():
+        class Scripted(Predictor):
+            name = "scripted"
+
+            def on_method_entry(self, method_key, this_oid):
+                return self._emit(list(oids), rfo=frozenset(oids))
+
+        return Scripted()
+
+    on = replay(trace, scripted(), store, None, latency=lat, rfo=True)
+    off = replay(trace, scripted(), store, None, latency=lat, rfo=False)
+    assert on.row()["rfo_prefetches"] == len(oids)
+    assert off.row()["rfo_prefetches"] == 0
+    assert off.row()["ownership_upgrades"] == len(oids)
+    assert on.row()["ownership_upgrades"] == 0
+    expect = len(oids) * lat.remote_hop
+    assert off.stall_seconds - on.stall_seconds == pytest.approx(expect)
+
+
+def test_bank_write_rfo_improves_calibrated_stall():
+    """The acceptance criterion end to end: on the recorded mutating bank
+    traversal, static-capre with RFO strictly beats RFO-off on stall."""
+    wl = _catalog()["bank_write"]
+    rows = {}
+    for rfo in (True, False):
+        client, _root, traces = record_workload(wl, runs=2)
+        reg = client.logic_module.registered[wl.name]
+        from repro.predict import make_pos_predictor
+
+        predictor = make_pos_predictor("static-capre")
+        predictor.warm(traces[0].accesses)
+        rows[rfo] = replay(traces[-1], predictor, client.store, reg,
+                           dispatch="batch", rfo=rfo)
+    assert rows[True].row()["rfo_prefetches"] > 0
+    assert rows[False].row()["ownership_upgrades"] > 0
+    assert rows[True].stall_seconds < rows[False].stall_seconds
+
+
+def test_iter_hint_tree_truncates_to_prefix_bound():
+    """Partial-traversal truncation in the offline expander: the early-exit
+    scan's hint expands only the static prefix of the collection."""
+    from repro.core.opt import DEFAULT_PREFIX_BOUND
+    from repro.predict.static_capre import StaticCapre
+
+    wl = _catalog()["bank"]
+    client, root, _traces = record_workload(wl, runs=1)
+    reg = client.logic_module.registered["bank"]
+    predictor = StaticCapre()
+    predictor.attach(client.store, reg)
+    out = predictor.on_method_entry("BankManagement.findLargeTransaction", root)
+    # root + bounded prefix of transactions + their account.cust chains
+    n_trans = sum(1 for o in out
+                  if client.store.peek(o) and client.store.cls_of(o) == "Transaction")
+    assert n_trans == DEFAULT_PREFIX_BOUND  # 40 transactions exist
+    assert predictor.overhead.truncated_hints > 0
+    # the full-traversal workload is NOT truncated
+    p2 = StaticCapre()
+    p2.attach(client.store, reg)
+    out_full = p2.on_method_entry("BankManagement.auditAll", root)
+    assert p2.overhead.truncated_hints == 0
+    assert len(out_full) > len(out)
+
+
+def test_replay_priority_orders_batches_and_admission_sheds():
+    """PrefetchRuntime.admit: headroom admits everything; at the cap only
+    priorities clearing the threshold get in."""
+    rt = PrefetchRuntime(parallel_workers=1, max_outstanding=0)
+    assert rt.admit(0.0)  # disabled: never sheds
+    rt2 = PrefetchRuntime(parallel_workers=1, max_outstanding=1,
+                          admission_threshold=0.5)
+    release = threading.Event()
+    rt2.fan_out(lambda _i: release.wait(10.0), [0])  # 1 outstanding = cap
+    assert rt2.admit(0.9)       # above threshold: admitted even at cap
+    assert not rt2.admit(0.1)   # below: shed
+    assert rt2.admission_dropped == 1
+    release.set()
+    assert rt2.drain(5.0)
+    rt.shutdown()
+    rt2.shutdown()
+
+
+def test_live_admission_control_sheds_low_priority_batches():
+    store = ObjectStore(n_services=1, latency=ZERO)
+    rt = PrefetchRuntime(parallel_workers=1, max_outstanding=1,
+                         admission_threshold=0.5)
+    release = threading.Event()
+    rt.fan_out(lambda _i: release.wait(10.0), [0])
+    oids = [store.put("X", {}) for _ in range(3)]
+    n = store.prefetch_batch(oids, runtime=rt,
+                             priorities={o: 0.1 for o in oids})
+    assert n == 0  # the whole batch was shed
+    assert rt.admission_dropped == 1
+    n2 = store.prefetch_batch(oids, runtime=rt,
+                              priorities={o: 0.9 for o in oids})
+    assert n2 == 1
+    release.set()
+    assert rt.drain(5.0)
+    rt.shutdown()
+
+
+def test_virtual_executor_slots_saturate():
+    """The modeled dispatch pool: with one slot, per-oid issues serialize
+    behind each other's loads; with ample slots they overlap."""
+    lat = LatencyModel(disk_load=10.0, remote_hop=0.0, write_back=0.0,
+                       think=1.0, parallel_per_ds=8)
+    store, oids = _store_with(4, n_services=1)
+    narrow = VirtualReplay(store, latency=lat, executor_workers=1)
+    narrow.predict(list(oids))
+    assert narrow.exec_delayed == len(oids) - 1
+    wide = VirtualReplay(store, latency=lat, executor_workers=8)
+    wide.predict(list(oids))
+    assert wide.exec_delayed == 0
+    # serialized issue pushes each later load's completion out by a full
+    # service time relative to the wide pool
+    t_narrow = max(done for _s, done in narrow.inflight[0].values())
+    t_wide = max(done for _s, done in wide.inflight[0].values())
+    assert t_narrow > t_wide
+
+
+# ---------------------------------------------------------------------------
 # drain-leak regression (satellite): warn + hard drain
 # ---------------------------------------------------------------------------
 

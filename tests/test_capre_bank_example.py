@@ -130,7 +130,9 @@ def test_rop_hints_depth_expansion(app):
 def test_no_branch_dependent_stats(app):
     report = analyze_application(app)
     s = report.stats
-    assert s.n_methods == 7  # incl. the write-dense creditAll companion
+    # incl. the write-dense creditAll companion and the early-exit
+    # findLargeTransaction scan (the partial-traversal truncation exemplar)
+    assert s.n_methods == 8
     # getAccount triggers a branch-dependent navigation (emp.dept), and the
     # augmented graph of setAllTransCustomers inherits it — for both, the
     # predicted set is inexact (Fig. 5b counts exactly this property).

@@ -384,7 +384,9 @@ _GATE_HEADER = (
     "stall_saved_pct,writes,write_hits,dirty_evictions,flushed_writes,"
     "protected_evictions,dispatch,batch_dispatches,dedup_suppressed,"
     "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s,"
-              "placement,replication,scenario,failovers\n"
+    "placement,replication,scenario,failovers,"
+    "rfo_prefetches,truncated_hints,hint_priority_mean,ownership_upgrades,"
+    "exec_delayed\n"
 )
 
 

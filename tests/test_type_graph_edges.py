@@ -1,0 +1,397 @@
+"""Edge cases of the augmented-type-graph analysis and the static hint
+optimizer (ISSUE 8): ``_covers_unconditional`` over nested conditionals,
+loop-taint interaction with grafted callee subtrees, recursion-cut call
+recording, all-callers dedup under dynamic dispatch, the opt.py passes
+(write-set projection, partial-traversal truncation, cost/priority model)
+and the capre-lint verifier."""
+
+import pytest
+
+from repro.core import lang
+from repro.core.hints import analyze_application, generate
+from repro.core.lang import (
+    Application,
+    Break,
+    Call,
+    ClassDef,
+    Compute,
+    COLLECTION,
+    ExprStmt,
+    FieldSpec,
+    ForEach,
+    Get,
+    If,
+    MethodDef,
+    Return,
+    SetField,
+    This,
+    Var,
+    fields_of,
+)
+from repro.core.lint import (
+    DEFAULT_APPS,
+    analyze,
+    diff_golden,
+    golden_payload,
+    lint_report,
+)
+from repro.core.opt import (
+    DEFAULT_COLLECTION_FANOUT,
+    DEFAULT_PREFIX_BOUND,
+    hint_cost,
+    hint_priority,
+)
+from repro.core.type_graph import CAPreAnalysis, _covers_unconditional
+
+
+def _noop(name="noop"):
+    return ExprStmt(Compute(lambda: None, (), name))
+
+
+def _cond(name="c"):
+    return Compute(lambda: True, (), name)
+
+
+# ---------------------------------------------------------------------------
+# _covers_unconditional: nested conditionals
+# ---------------------------------------------------------------------------
+
+
+def test_covers_unconditional_trivial_cases():
+    assert _covers_unconditional({()})
+    assert not _covers_unconditional(set())
+    # one arm of a 2-way conditional does not cover
+    assert not _covers_unconditional({((1, 0, 2),)})
+    # both arms do
+    assert _covers_unconditional({((1, 0, 2),), ((1, 1, 2),)})
+
+
+def test_covers_unconditional_nested_reduction():
+    """An occurrence in the else arm plus occurrences in BOTH nested arms of
+    the then branch reduces bottom-up to full coverage."""
+    paths = {
+        ((1, 1, 2),),                 # else arm of the outer conditional
+        ((1, 0, 2), (2, 0, 2)),       # then arm, nested then
+        ((1, 0, 2), (2, 1, 2)),       # then arm, nested else
+    }
+    assert _covers_unconditional(paths)
+    # drop one nested arm: the outer then is only partially covered
+    assert not _covers_unconditional(paths - {((1, 0, 2), (2, 1, 2))})
+
+
+def test_covers_unconditional_incomplete_nested():
+    assert not _covers_unconditional({
+        ((1, 0, 2), (2, 0, 2)),
+        ((1, 1, 2), (3, 0, 2)),  # else arm only via one nested branch
+    })
+
+
+def test_nested_conditional_branch_dependence_end_to_end():
+    """A navigation occurring in every leaf of a nested conditional is NOT
+    branch-dependent; one missing leaf makes it so."""
+    leaf = ClassDef("Leaf", fields_of(FieldSpec("x")))
+    node = ClassDef("Node", fields_of(FieldSpec("a", target="Leaf"),
+                                      FieldSpec("b", target="Leaf")))
+    node.add_method(MethodDef("m", params=(), body=[
+        If(cond=_cond("outer"),
+           then=[If(cond=_cond("inner"),
+                    then=[ExprStmt(Get(This(), "a"))],
+                    els=[ExprStmt(Get(This(), "a"))])],
+           els=[ExprStmt(Get(This(), "a")),
+                ExprStmt(Get(This(), "b"))]),
+    ]))
+    app = Application(name="nested", classes={c.name: c for c in (leaf, node)})
+    g = CAPreAnalysis(app).analyze_all()["Node.m"]
+    children = g.this_root.children
+    assert not children["a"].branch_dependent  # present in every leaf
+    assert children["b"].branch_dependent      # else arm only
+
+
+# ---------------------------------------------------------------------------
+# loop taint x grafted callee subtrees
+# ---------------------------------------------------------------------------
+
+
+def _graft_app(caller_body):
+    item = ClassDef("Item", fields_of(FieldSpec("detail", target="Detail"),
+                                      FieldSpec("amount")))
+    item.add_method(MethodDef("touch", params=(), ret_type=None, body=[
+        ExprStmt(Get(Get(This(), "detail"), "amount")),
+    ]))
+    detail = ClassDef("Detail", fields_of(FieldSpec("amount")))
+    box = ClassDef("Box", fields_of(
+        FieldSpec("items", target="Item", card=COLLECTION)))
+    box.add_method(MethodDef("scan", params=(), body=caller_body))
+    return Application(name="graft", classes={c.name: c for c in (item, detail, box)})
+
+
+def test_grafted_subtree_inherits_loop_taint():
+    """A callee grafted inside an early-exit loop lands with every grafted
+    navigation tainted: the loop may stop before reaching any element."""
+    app = _graft_app([
+        ForEach("it", This(), "items", [
+            ExprStmt(Call(Var("it"), "touch")),
+            Break(),
+        ]),
+    ])
+    g = CAPreAnalysis(app).analyze_all()["Box.scan"]
+    items = g.this_root.children["items"]
+    detail = items.children["detail"]
+    assert all(tainted for _bp, tainted in items.occurrences)
+    assert all(tainted for _bp, tainted in detail.occurrences)
+    assert items.branch_dependent and detail.branch_dependent
+
+
+def test_grafted_subtree_clean_in_untainted_loop():
+    """The same graft in a plain full traversal stays clean — taint comes
+    from the loop, not from grafting itself."""
+    app = _graft_app([
+        ForEach("it", This(), "items", [
+            ExprStmt(Call(Var("it"), "touch")),
+        ]),
+    ])
+    g = CAPreAnalysis(app).analyze_all()["Box.scan"]
+    items = g.this_root.children["items"]
+    detail = items.children["detail"]
+    assert any(not tainted for _bp, tainted in detail.occurrences)
+    assert not detail.branch_dependent
+
+
+def test_grafted_callee_write_set_propagates_conditionality():
+    """Interprocedural write-set propagation collapses the callee's own
+    branch structure into the taint bit: an unconditional callee write
+    arrives clean, a conditional one arrives tainted."""
+    item = ClassDef("Item", fields_of(FieldSpec("amount"), FieldSpec("flag")))
+    item.add_method(MethodDef("always", params=(), body=[
+        SetField(This(), "amount", Compute(lambda: 1, (), "one")),
+    ]))
+    item.add_method(MethodDef("sometimes", params=(), body=[
+        If(cond=_cond(), then=[SetField(This(), "flag", Compute(lambda: 1, (), "one"))]),
+    ]))
+    box = ClassDef("Box", fields_of(
+        FieldSpec("items", target="Item", card=COLLECTION)))
+    box.add_method(MethodDef("creditEach", params=(), body=[
+        ForEach("it", This(), "items", [ExprStmt(Call(Var("it"), "always"))]),
+    ]))
+    box.add_method(MethodDef("flagEach", params=(), body=[
+        ForEach("it", This(), "items", [ExprStmt(Call(Var("it"), "sometimes"))]),
+    ]))
+    app = Application(name="wr", classes={c.name: c for c in (item, box)})
+    graphs = CAPreAnalysis(app).analyze_all()
+    credit = graphs["Box.creditEach"].this_root.children["items"]
+    assert credit.written
+    assert any(not t for _bp, t in credit.write_occurrences)
+    flag = graphs["Box.flagEach"].this_root.children["items"]
+    assert flag.written  # conditional writes still mark the update site
+    assert all(t for _bp, t in flag.write_occurrences)
+
+
+# ---------------------------------------------------------------------------
+# recursion cut: call recording + hints kept at every level
+# ---------------------------------------------------------------------------
+
+
+def test_recursion_cut_records_ungrafted_call_site():
+    node = ClassDef("Tree", fields_of(FieldSpec("left", target="Tree"),
+                                      FieldSpec("val")))
+    node.add_method(MethodDef("walk", params=(), body=[
+        ExprStmt(Get(Get(This(), "left"), "val")),
+        ExprStmt(Call(Get(This(), "left"), "walk")),
+    ]))
+    app = Application(name="rec", classes={"Tree": node})
+    analysis = CAPreAnalysis(app)
+    report = generate(analysis)
+    sites = analysis.call_sites["Tree.walk"]
+    assert sites and all(s.reason == "recursion" and not s.grafted for s in sites)
+    # an ungrafted caller cannot cover: the recursive method KEEPS its hint
+    # and re-schedules prefetching at every level (the rolling frontier)
+    assert report.hints_str("Tree.walk") == {"left"}
+
+
+# ---------------------------------------------------------------------------
+# all-callers dedup under dynamic dispatch
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_app(overridden: bool) -> Application:
+    """A caller invoking Base.work on every element; when ``overridden`` a
+    subtype overrides work, so the call must not be inlined."""
+    part = ClassDef("Part", fields_of(FieldSpec("name")))
+    base = ClassDef("Base", fields_of(FieldSpec("part", target="Part")))
+    base.add_method(MethodDef("work", params=(), body=[
+        ExprStmt(Get(Get(This(), "part"), "name")),
+    ]))
+    classes = [part, base]
+    if overridden:
+        sub = ClassDef("Sub", supertype="Base")
+        sub.add_method(MethodDef("work", params=(), body=[_noop()]))
+        classes.append(sub)
+    owner = ClassDef("Owner", fields_of(
+        FieldSpec("bases", target="Base", card=COLLECTION)))
+    owner.add_method(MethodDef("runAll", params=(), body=[
+        ForEach("b", This(), "bases", [ExprStmt(Call(Var("b"), "work"))]),
+    ]))
+    classes.append(owner)
+    return Application(name="dyn", classes={c.name: c for c in classes})
+
+
+def test_all_callers_dedup_with_monomorphic_callee():
+    """No override: the callee grafts into its only caller, whose own hint
+    covers it — the callee's hint is deduplicated away."""
+    analysis = CAPreAnalysis(_dispatch_app(overridden=False))
+    report = generate(analysis)
+    assert report.full_hints_str("Base.work") == {"part"}
+    assert report.hints_str("Base.work") == set()
+    assert report.hints_str("Owner.runAll") == {"bases[].part"}
+    sites = analysis.call_sites["Base.work"]
+    assert all(s.grafted for s in sites)
+
+
+def test_all_callers_dedup_skipped_under_dynamic_dispatch():
+    """With an override, the call site is never inlined (section 4.4): the
+    caller cannot cover the callee's hints, so Base.work keeps them and the
+    caller's graph stops at the collection step."""
+    analysis = CAPreAnalysis(_dispatch_app(overridden=True))
+    report = generate(analysis)
+    assert report.hints_str("Base.work") == {"part"}
+    assert report.hints_str("Owner.runAll") == {"bases[]"}
+    sites = analysis.call_sites["Base.work"]
+    assert all(not s.grafted and s.reason == "overridden" for s in sites)
+
+
+# ---------------------------------------------------------------------------
+# optimizer passes (core.opt)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bank_report():
+    from repro.apps.bank import build_bank_app
+
+    return analyze_application(build_bank_app())
+
+
+def test_opt_rfo_projection_on_bank(bank_report):
+    """Pass 1: creditAll writes every transaction unconditionally;
+    setAllTransCustomers updates accounts through the grafted setter."""
+    by_method = {
+        key: {str(h): h for h in hints}
+        for key, hints in bank_report.hints.items()
+    }
+    credit = by_method["BankManagement.creditAll"]["transactions[]"]
+    assert credit.rfo and credit.rfo_depths == (0,)
+    setter = by_method["BankManagement.setAllTransCustomers"][
+        "transactions[].account.cust.company"]
+    assert setter.rfo_depths == (1,)  # the account is the update site
+    audit = by_method["BankManagement.auditAll"][
+        "transactions[].account.cust.company"]
+    assert not audit.rfo  # read-only traversal: no ownership needed
+
+
+def test_opt_truncation_on_early_exit_scan(bank_report):
+    """Pass 2: findLargeTransaction's break makes every occurrence of the
+    transactions[] step loop-tainted -> static prefix bound."""
+    hints = {str(h): h for h in
+             bank_report.hints["BankManagement.findLargeTransaction"]}
+    h = hints["transactions[].account.cust"]
+    assert h.truncated
+    assert h.trunc_step == 0
+    assert h.prefix_bound == DEFAULT_PREFIX_BOUND
+    # the full-traversal companions are NOT truncated
+    audit = {str(h): h for h in bank_report.hints["BankManagement.auditAll"]}
+    assert all(not h.truncated for h in audit.values())
+
+
+def test_opt_cost_and_priority_model():
+    single = (("a", lang.SINGLE), ("b", lang.SINGLE))
+    assert hint_cost(single) == 2.0
+    coll = (("xs", lang.COLLECTION),)
+    assert hint_cost(coll) == DEFAULT_COLLECTION_FANOUT
+    nested = (("xs", lang.COLLECTION), ("ys", lang.COLLECTION))
+    assert hint_cost(nested) == (DEFAULT_COLLECTION_FANOUT
+                                 + DEFAULT_COLLECTION_FANOUT ** 2)
+    # truncation caps the frontier at the trunc step
+    assert hint_cost(coll, prefix_bound=4, trunc_step=0) == 4.0
+    # priority: monotone decreasing in cost, bounded in (0, 1]
+    costs = [1.0, 2.0, 16.0, 272.0]
+    prios = [hint_priority(c) for c in costs]
+    assert prios == sorted(prios, reverse=True)
+    assert all(0.0 < p <= 1.0 for p in prios)
+
+
+def test_opt_annotations_do_not_change_hint_identity(bank_report):
+    """The optimizer decorates hints; eq/hash/dedup stay steps-only."""
+    from dataclasses import replace
+
+    h = bank_report.hints["BankManagement.creditAll"][0]
+    plain = replace(h, rfo_depths=(), prefix_bound=None, trunc_step=None,
+                    priority=0.0)
+    assert plain == h and hash(plain) == hash(h)
+
+
+# ---------------------------------------------------------------------------
+# capre-lint (core.lint): verifier + golden drift
+# ---------------------------------------------------------------------------
+
+
+def test_lint_clean_on_all_catalog_apps():
+    for name in DEFAULT_APPS:
+        app, analysis, report = analyze(name)
+        assert lint_report(app, analysis, report) == [], name
+
+
+def test_lint_flags_corrupted_annotations():
+    from dataclasses import replace
+
+    app, analysis, report = analyze("bank")
+    key = "BankManagement.auditAll"
+    h = report.hints[key][0]
+    report.hints[key] = (
+        replace(h, rfo_depths=(99,), trunc_step=1, prefix_bound=None,
+                priority=7.0),
+    ) + report.hints[key][1:]
+    kinds = {f.kind for f in lint_report(app, analysis, report)}
+    assert "bounds" in kinds
+
+
+def test_lint_flags_schema_drift():
+    app, analysis, report = analyze("bank")
+    key = "BankManagement.auditAll"
+    from repro.core.hints import Hint
+
+    report.hints[key] = report.hints[key] + (
+        Hint((("no_such_field", lang.SINGLE),), priority=0.5),
+    )
+    findings = lint_report(app, analysis, report)
+    assert any(f.kind == "schema" and "no_such_field" in f.message
+               for f in findings)
+
+
+def test_golden_diff_detects_hint_and_annotation_drift():
+    reports = {name: analyze(name)[2] for name in ("bank", "wordcount")}
+    golden = golden_payload(reports)
+    assert diff_golden(golden, golden_payload(reports)) == []
+    # annotation drift
+    mutated = golden_payload(reports)
+    rec = mutated["apps"]["bank"]["methods"]["BankManagement.creditAll"][0]
+    rec["priority"] = 0.9999
+    drift = diff_golden(golden, mutated)
+    assert drift and any("annotations changed" in d for d in drift)
+    # structural drift
+    mutated2 = golden_payload(reports)
+    mutated2["apps"]["bank"]["methods"].pop("BankManagement.creditAll")
+    drift2 = diff_golden(golden, mutated2)
+    assert any("disappeared" in d for d in drift2)
+
+
+def test_committed_golden_matches_current_analysis():
+    """The in-repo golden must track the analysis — the same gate CI runs."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "artifacts", "analysis", "hints.json")
+    with open(path) as fh:
+        golden = json.load(fh)
+    current = golden_payload({name: analyze(name)[2] for name in DEFAULT_APPS})
+    assert diff_golden(golden, current) == []
