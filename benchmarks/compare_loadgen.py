@@ -1,0 +1,146 @@
+"""Regression gate over the multi-tenant loadgen artifact: compare a fresh
+``loadgen.csv`` (wall legs from ``benchmarks.loadgen``, virtual legs from
+``repro.predict.evaluate --tenants N``) against the committed baseline and
+fail when a tenant-count's tail latency regressed.
+
+Gating logic, per baseline ``(clock, tenants, arrival, dispatch, mode)``
+group:
+
+  * the group must still exist in the fresh file with the same tenant
+    count (a matrix leg silently dropping out is a regression, not a
+    skip) and its ``ALL`` row must carry a populated ``fairness_ratio``;
+  * the *worst per-tenant* ``stall_p99_s`` may not exceed the baseline's
+    worst by more than the clock's headroom — virtual rows replay a
+    deterministic clock so they get the tight bound (``--tolerance``,
+    default 15% relative), wall rows run real threads on shared CI
+    runners so they get ``--wall-tolerance`` (default 3x) plus an
+    absolute floor under which noise is never a failure;
+  * per-tenant ``evicted_before_use`` + ``admission_shed`` columns must
+    be present and populated (the interference/back-pressure accounting
+    going blind fails the gate even if latency looks fine).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.compare_loadgen fresh.csv baseline.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+
+from repro.predict.loadsim import LOADGEN_COLUMNS
+
+#: below this absolute p99 (seconds), differences are scheduler noise, not
+#: regressions — never fail on them (wall rows; virtual floor is tighter)
+P99_ABS_FLOOR_S = {"wall": 5e-3, "virtual": 1e-4}
+
+
+def _read(path: str) -> list[dict]:
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        sys.exit(f"error: {path} is empty")
+    missing = [c for c in LOADGEN_COLUMNS if c not in rows[0]]
+    if missing:
+        sys.exit(f"error: {path} lacks columns {missing} — the harness "
+                 f"schema drifted without a baseline update")
+    return rows
+
+
+def _key(row: dict) -> tuple:
+    return (row["clock"], row["tenants"], row["arrival"],
+            row["dispatch"], row["mode"])
+
+
+def _groups(rows: list[dict]) -> dict[tuple, list[dict]]:
+    out: dict[tuple, list[dict]] = {}
+    for row in rows:
+        out.setdefault(_key(row), []).append(row)
+    return out
+
+
+def _worst_p99(group: list[dict]) -> float:
+    vals = [float(r["stall_p99_s"]) for r in group
+            if r["tenant"] != "ALL" and r["stall_p99_s"] != ""]
+    return max(vals) if vals else 0.0
+
+
+def compare(fresh_rows: list[dict], base_rows: list[dict],
+            tolerance: float, wall_tolerance: float,
+            subset: bool = False) -> list[str]:
+    problems: list[str] = []
+    fresh = _groups(fresh_rows)
+    gated = 0
+    for key, base_group in _groups(base_rows).items():
+        clock, tenants, arrival, dispatch, mode = key
+        label = (f"{clock}/tenants={tenants}/arrival={arrival}"
+                 f"/dispatch={dispatch}/mode={mode}")
+        fresh_group = fresh.get(key)
+        if fresh_group is None:
+            if subset:
+                # a CI matrix leg regenerates only its own tenant count;
+                # the other legs gate the remaining baseline groups
+                print(f"{label}: not in this leg, skipped")
+                continue
+            problems.append(f"{label}: leg missing from fresh file")
+            continue
+        gated += 1
+        n_base = sum(1 for r in base_group if r["tenant"] != "ALL")
+        n_fresh = sum(1 for r in fresh_group if r["tenant"] != "ALL")
+        if n_fresh != n_base:
+            problems.append(f"{label}: tenant rows {n_base} -> {n_fresh}")
+        agg = [r for r in fresh_group if r["tenant"] == "ALL"]
+        if not agg or agg[0]["fairness_ratio"] in ("", None):
+            problems.append(f"{label}: ALL row lost its fairness_ratio")
+        for col in ("evicted_before_use", "admission_shed"):
+            if any(r[col] in ("", None) for r in fresh_group
+                   if r["tenant"] != "ALL"):
+                problems.append(f"{label}: per-tenant {col} went blank")
+        base_p99 = _worst_p99(base_group)
+        fresh_p99 = _worst_p99(fresh_group)
+        headroom = wall_tolerance if clock == "wall" else 1.0 + tolerance
+        floor = P99_ABS_FLOOR_S.get(clock, 0.0)
+        limit = max(base_p99 * headroom, floor)
+        status = "ok" if fresh_p99 <= limit else "REGRESSED"
+        print(f"{label}: worst-tenant p99 {base_p99:.6f}s -> {fresh_p99:.6f}s "
+              f"(limit {limit:.6f}s) {status}")
+        if fresh_p99 > limit:
+            problems.append(
+                f"{label}: worst-tenant p99 {fresh_p99:.6f}s exceeds "
+                f"{limit:.6f}s (baseline {base_p99:.6f}s x{headroom:.2f})")
+    if not gated:
+        problems.append("no baseline group matched the fresh file at all — "
+                        "nothing was gated (wrong files?)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative p99 headroom for virtual (deterministic) "
+                         "rows")
+    ap.add_argument("--wall-tolerance", type=float, default=3.0,
+                    help="multiplicative p99 headroom for wall rows "
+                         "(shared CI runners are noisy)")
+    ap.add_argument("--subset", action="store_true",
+                    help="the fresh file covers only some baseline legs "
+                         "(a CI matrix job); skip the others instead of "
+                         "failing on them")
+    args = ap.parse_args(argv)
+    problems = compare(_read(args.fresh), _read(args.baseline),
+                       args.tolerance, args.wall_tolerance,
+                       subset=args.subset)
+    if problems:
+        print(f"\nFAIL: {len(problems)} problem(s)", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print("\nOK: loadgen tails within baseline headroom")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

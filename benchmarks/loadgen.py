@@ -1,0 +1,263 @@
+"""Multi-tenant closed/open-loop load generator over one shared store.
+
+The single-tenant benches answer "how much stall does prefetching hide";
+this harness answers the multi-tenancy questions (DESIGN.md §3.10): when N
+concurrent ``Session``s share one store's caches, disk queues and a PR 4
+shared line budget, whose prefetches help whom?  Each tenant is a thread
+driving one of the paper apps (heavy-tailed mix — most tenants run the
+cheap traversals, a rare tail runs OO7) through a labeled session, so
+
+  * per-tenant stall distributions come from the ``tenant_stall_s``
+    registry histograms the labeled session pre-resolves,
+  * per-tenant prefetch interference comes from lifecycle spans: a span
+    that ends ``evicted`` is charged to the session that *scheduled* it
+    (its working set was destroyed by the shared budget),
+  * per-tenant shed counts come from each session's own
+    ``PrefetchRuntime.admit`` accounting (``max_outstanding``
+    back-pressure),
+
+and the run emits the same ``loadgen.csv`` schema as the virtual-clock
+mirror (``predict/evaluate.py --tenants N``), with ``clock=wall`` rows
+carrying real elapsed seconds.  Arrival processes:
+
+  * ``closed``        — each tenant re-submits after an exponential think,
+  * ``poisson:RATE``  — open: job k starts at the tenant's k-th Poisson
+    arrival (aggregate RATE jobs/s split evenly), or immediately after
+    job k-1 if the system is running behind (queued arrivals).
+
+Usage: PYTHONPATH=src python -m benchmarks.loadgen --tenants 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import threading
+import time
+
+from repro.obs import Observability
+from repro.pos.client import POSClient, Session, SessionConfig
+from repro.predict.evaluate import _catalog
+from repro.predict.loadsim import (
+    DEFAULT_MIX,
+    heavy_tailed_weights,
+    parse_arrival,
+    write_loadgen_csv,
+)
+
+from .common import BENCH_LATENCY, timer_warm_keeper
+
+
+class _TenantRun:
+    def __init__(self, idx: int, label: str, app_key: str):
+        self.idx = idx
+        self.label = label
+        self.app_key = app_key
+        self.jobs_done = 0
+        self.shed = 0
+        self.wall_s = 0.0
+        self.error: str = ""
+
+
+def _tenant_worker(client: POSClient, tn: _TenantRun, wl, root: int,
+                   args, start_barrier: threading.Barrier,
+                   start_t: list, arrivals: list[float],
+                   think_rng: random.Random) -> None:
+    reg = client.logic_module.registered[wl.name]
+    cfg = SessionConfig(
+        mode=args.mode, dispatch=args.dispatch,
+        parallel_workers=args.workers, session_label=tn.label,
+        max_outstanding=args.max_outstanding,
+        admission_threshold=args.admission_threshold,
+    )
+    session = Session(client.store, reg, cfg)
+    try:
+        start_barrier.wait(timeout=30.0)
+        t0 = time.perf_counter()
+        for k in range(args.jobs):
+            if arrivals:
+                # open loop: wait for this job's arrival; a late tenant
+                # starts immediately (the arrival queued behind job k-1)
+                delay = (start_t[0] + arrivals[k]) - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            wl.run_once(session, root)
+            tn.jobs_done += 1
+            if not arrivals and k + 1 < args.jobs:
+                time.sleep(think_rng.expovariate(1.0 / args.think_mean))
+        session.drain(30.0)
+        tn.wall_s = time.perf_counter() - t0
+        tn.shed = session.runtime.stats()["admission_dropped"]
+    except Exception as exc:  # surface, don't hang the join
+        tn.error = f"{type(exc).__name__}: {exc}"
+    finally:
+        session.close()
+
+
+def run_loadgen(args) -> list[dict]:
+    kind, rate = parse_arrival(args.arrival)
+    mix = [m for m in args.mix.split(",") if m]
+    cat = _catalog()
+
+    client = POSClient(n_services=args.services, latency=BENCH_LATENCY,
+                       cache_capacity=args.cache_capacity,
+                       shared_budget=args.cache_capacity > 0)
+    obs = Observability(tracing=True)
+    client.store.attach_obs(obs)
+    roots: dict[str, int] = {}
+    for key in mix:
+        wl = cat[key]
+        if wl.name not in client.logic_module.registered:
+            client.register(wl.build_app())
+        roots[key] = wl.populate(client.store)
+
+    # same seeded assignment scheme as the virtual mirror, so a wall row
+    # and its virtual twin describe the same tenant population
+    rng = random.Random(args.seed)
+    assignment = rng.choices(mix, weights=heavy_tailed_weights(len(mix)),
+                             k=args.tenants)
+    tenants = [_TenantRun(i, f"t{i:03d}", assignment[i])
+               for i in range(args.tenants)]
+
+    barrier = threading.Barrier(args.tenants + 1)
+    start_t = [0.0]
+    threads = []
+    for tn in tenants:
+        arr_rng = random.Random(
+            (args.seed << 16) ^ (tn.idx * 2654435761 & 0xFFFFFFFF))
+        arrivals: list[float] = []
+        if kind == "poisson":
+            t_arr = 0.0
+            for _ in range(args.jobs):
+                t_arr += arr_rng.expovariate(rate / args.tenants)
+                arrivals.append(t_arr)
+        th = threading.Thread(
+            target=_tenant_worker,
+            args=(client, tn, cat[tn.app_key], roots[tn.app_key], args,
+                  barrier, start_t, arrivals, arr_rng),
+            name=f"loadgen-{tn.label}", daemon=True,
+        )
+        threads.append(th)
+        th.start()
+
+    run_t0 = time.perf_counter()
+    start_t[0] = run_t0
+    barrier.wait(timeout=30.0)
+    for th in threads:
+        th.join()
+    run_wall = time.perf_counter() - run_t0
+
+    failed = [tn for tn in tenants if tn.error]
+    if failed:
+        raise RuntimeError(
+            f"{len(failed)}/{len(tenants)} tenants failed; first: "
+            f"{failed[0].label} ({failed[0].app_key}): {failed[0].error}")
+
+    # -- collect: stall histograms, span attribution, fairness ---------------
+    evicted: dict[str, int] = {}
+    for span in obs.tracer.spans():
+        if span.outcome == "evicted" and span.session:
+            evicted[span.session] = evicted.get(span.session, 0) + 1
+
+    base = {
+        "clock": "wall", "tenants": args.tenants, "arrival": args.arrival,
+        "mix": "+".join(mix), "dispatch": args.dispatch, "mode": args.mode,
+        "cache_capacity": args.cache_capacity,
+        "shared_budget": args.cache_capacity > 0,
+        "max_outstanding": args.max_outstanding,
+        "fairness_ratio": "", "seed": args.seed,
+    }
+    rows = []
+    means = []
+    total_stall = 0.0
+    total_ops = 0
+    for tn in tenants:
+        hist = obs.registry.histogram("tenant_stall_s", tenant=tn.label)
+        p50, p99, p999 = hist.percentiles((0.5, 0.99, 0.999))
+        ops = hist.count
+        mean = hist.sum / ops if ops else 0.0
+        if ops:
+            means.append(mean)
+        total_stall += hist.sum
+        total_ops += ops
+        row = dict(base)
+        row.update(
+            tenant=tn.label, app=tn.app_key, jobs=tn.jobs_done, ops=ops,
+            stall_p50_s=round(p50 or 0.0, 9), stall_p99_s=round(p99 or 0.0, 9),
+            stall_p999_s=round(p999 or 0.0, 9), stall_mean_s=round(mean, 9),
+            stall_total_s=round(hist.sum, 9),
+            evicted_before_use=evicted.get(tn.label, 0),
+            admission_shed=tn.shed, wall_s=round(tn.wall_s, 3),
+        )
+        rows.append(row)
+    fairness = (max(means) / max(min(means), 1e-12)) if means else 0.0
+    agg = dict(base)
+    agg.update(
+        tenant="ALL", app="mix", jobs=sum(tn.jobs_done for tn in tenants),
+        ops=total_ops, stall_p50_s="", stall_p99_s="", stall_p999_s="",
+        stall_mean_s=round(total_stall / max(1, total_ops), 9),
+        stall_total_s=round(total_stall, 9),
+        evicted_before_use=sum(evicted.values()),
+        admission_shed=sum(tn.shed for tn in tenants),
+        fairness_ratio=round(fairness, 4), wall_s=round(run_wall, 3),
+    )
+    rows.append(agg)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, default=8,
+                    help="concurrent labeled sessions over the shared store")
+    ap.add_argument("--jobs", type=int, default=2, help="jobs per tenant")
+    ap.add_argument("--arrival", default="closed",
+                    help="'closed' (exponential think) or 'poisson:RATE' "
+                         "(open, aggregate RATE jobs/s)")
+    ap.add_argument("--mix", default=",".join(DEFAULT_MIX),
+                    help="comma-separated catalog keys, cheapest-first "
+                         "(heavy-tailed 1/rank weights)")
+    ap.add_argument("--mode", default="capre",
+                    help="predictor mode for every tenant session")
+    ap.add_argument("--dispatch", default="batch")
+    ap.add_argument("--cache-capacity", type=int, default=256,
+                    help="shared line budget across all Data Services "
+                         "(0 = unbounded, no budget)")
+    ap.add_argument("--max-outstanding", type=int, default=8,
+                    help="per-session admission bound (0 = unbounded)")
+    ap.add_argument("--admission-threshold", type=float, default=0.5)
+    ap.add_argument("--workers", type=int, default=4,
+                    help="parallel prefetch workers per session (kept small: "
+                         "N tenants each own a pool)")
+    ap.add_argument("--services", type=int, default=4)
+    ap.add_argument("--think-mean", type=float, default=5e-3,
+                    help="closed-loop mean think time between jobs, seconds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join("artifacts", "predict"),
+                    help="directory for loadgen.csv")
+    ap.add_argument("--append", action="store_true",
+                    help="append to an existing loadgen.csv (CI matrix legs)")
+    ap.add_argument("--no-csv", action="store_true")
+    args = ap.parse_args(argv)
+
+    with timer_warm_keeper():
+        rows = run_loadgen(args)
+    agg = rows[-1]
+    print(f"# loadgen tenants={args.tenants} arrival={args.arrival} "
+          f"mode={args.mode} dispatch={args.dispatch} wall={agg['wall_s']}s")
+    print(f"#   ops={agg['ops']} mean_stall={agg['stall_mean_s']}s "
+          f"fairness={agg['fairness_ratio']} "
+          f"evicted_before_use={agg['evicted_before_use']} "
+          f"shed={agg['admission_shed']}")
+    for row in rows[:-1]:
+        print(f"{row['tenant']},{row['app']},jobs={row['jobs']},"
+              f"ops={row['ops']},p99={row['stall_p99_s']}s,"
+              f"evicted={row['evicted_before_use']},shed={row['admission_shed']}")
+    if not args.no_csv:
+        path = os.path.join(args.out, "loadgen.csv")
+        write_loadgen_csv(path, rows, append=args.append)
+        print(f"# wrote {path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -277,6 +277,19 @@ class Registry:
         with self._lock:
             self._sources[name] = (snapshot_fn, reset_fn)
 
+    def unregister_source(self, name: str) -> bool:
+        """Remove a snapshot source (the inverse ``register_source`` never
+        had): a closed ``Session`` must drop its ``runtime/<label>`` entry,
+        or every snapshot keeps calling a snapshot_fn that pins a shut-down
+        ``PrefetchRuntime`` forever.  Returns whether the name was
+        registered."""
+        with self._lock:
+            return self._sources.pop(name, None) is not None
+
+    def source_names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._sources)
+
     # -- aggregation ---------------------------------------------------------
 
     def merged_histogram(self, name: str) -> Optional[Histogram]:

@@ -143,9 +143,10 @@ class Tracer:
     # -- lifecycle recording -------------------------------------------------
 
     def predicted(self, oids: Iterable[int], origin: str = "",
-                  t: Optional[float] = None) -> None:
+                  t: Optional[float] = None, session: str = "") -> None:
         t0 = time.perf_counter()
         ts = self.clock() if t is None else t
+        who = session or self.session
         with self._lock:
             self.events += 1
             for oid in oids:
@@ -154,7 +155,7 @@ class Tracer:
                     span.re_predicted += 1
                     continue
                 self._active[oid] = PrefetchSpan(
-                    oid=oid, origin=origin, predicted_t=ts, session=self.session
+                    oid=oid, origin=origin, predicted_t=ts, session=who
                 )
         self._charge(t0)
 
@@ -164,9 +165,10 @@ class Tracer:
             return self._batch_ids
 
     def dispatched(self, oids: Iterable[int], service: int, batch_id: int = -1,
-                   t: Optional[float] = None) -> None:
+                   t: Optional[float] = None, session: str = "") -> None:
         t0 = time.perf_counter()
         ts = self.clock() if t is None else t
+        who = session or self.session
         with self._lock:
             self.events += 1
             for oid in oids:
@@ -175,7 +177,7 @@ class Tracer:
                     # dispatch without a recorded prediction (e.g. the
                     # legacy generated closure): open the span here
                     span = PrefetchSpan(oid=oid, predicted_t=ts,
-                                        session=self.session)
+                                        session=who)
                     self._active[oid] = span
                 if span.dispatched_t is None:
                     span.dispatched_t = ts
@@ -217,11 +219,13 @@ class Tracer:
         self._charge(t0)
 
     def loaded(self, oids: Iterable[int], service: int, lane: int,
-               queued_t: float, start_t: float, done_t: float) -> None:
+               queued_t: float, start_t: float, done_t: float,
+               session: str = "") -> None:
         """A batch lane landed a chunk: slot wait = ``start - queued``,
         service time = ``done - start`` (chunk-granular on the wall clock:
         the chunk's sequential loads share one slot hold)."""
         t0 = time.perf_counter()
+        who = session or self.session
         with self._lock:
             self.events += 1
             for oid in oids:
@@ -229,7 +233,7 @@ class Tracer:
                 if span is None:
                     span = PrefetchSpan(oid=oid, predicted_t=queued_t,
                                         dispatched_t=queued_t, service=service,
-                                        session=self.session)
+                                        session=who)
                     self._active[oid] = span
                 span.lane = lane
                 span.service = service
@@ -241,7 +245,7 @@ class Tracer:
 
     def demand(self, oid: int, service: int, needed_t: float, stall_s: float,
                full_load: bool, disk_load_s: float,
-               t: Optional[float] = None) -> None:
+               t: Optional[float] = None, session: str = "") -> None:
         """A demand access touched ``oid``.  If a prefetch span is live,
         this is its terminal ``hit`` (resident: full disk load hidden) or
         ``partial`` (in flight: the app waited out ``stall_s``); otherwise
@@ -269,7 +273,8 @@ class Tracer:
                     self._finish(span, "hit", end_t)
             elif full_load:
                 miss = PrefetchSpan(
-                    oid=oid, kind="demand", service=service, session=self.session,
+                    oid=oid, kind="demand", service=service,
+                    session=session or self.session,
                     predicted_t=needed_t, queued_t=needed_t,
                     load_start_t=needed_t, load_done_t=end_t,
                     stall_s=stall_s,

@@ -18,6 +18,7 @@ plus anything else registered via ``repro.predict.register``.
 
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -103,6 +104,13 @@ class SessionConfig:
     session_label: str = ""
 
 
+# Process-monotonic default session labels.  The old scheme,
+# ``id(self) & 0xFFFF``, collides trivially: CPython reuses freed object
+# addresses, so open/close loops hand successive sessions the *same* label
+# and their registry sources silently overwrite each other.
+_session_ids = itertools.count(1)
+
+
 class Session:
     def __init__(self, store: ObjectStore, reg: RegisteredApp, config: SessionConfig = None):
         self.store = store
@@ -125,13 +133,25 @@ class Session:
         # wire this session into the store's observability context (if one
         # is attached): its runtime queue depths become a registry source,
         # and spans opened while it runs carry its label
-        self.label = self.config.session_label or f"s{id(self) & 0xFFFF:04x}"
+        self.label = self.config.session_label or f"s{next(_session_ids):04d}"
+        # Spans are attributed per-call: the label rides every
+        # prefetch/demand recording through the dispatch path (predictor ->
+        # store.prefetch_* -> Tracer), never by mutating shared tracer
+        # state.  Two concurrent labeled sessions therefore get
+        # correctly-interleaved attribution, and close() has nothing
+        # global to restore.
+        self._tenant_stall_hist = None
         if store.obs is not None:
             store.obs.registry.register_source(
                 f"runtime/{self.label}", self.runtime.stats
             )
-            if store.obs.tracer is not None and self.config.session_label:
-                store.obs.tracer.session = self.config.session_label
+            if self.config.session_label:
+                # pre-resolved per-tenant stall histogram (hot path records
+                # directly; only explicitly-labeled sessions get one so
+                # anonymous open/close churn can't grow the registry)
+                self._tenant_stall_hist = store.obs.registry.histogram(
+                    "tenant_stall_s", tenant=self.label
+                )
         # Save whatever listeners are already installed (another session's
         # monitoring) instead of clobbering them: a predictor bound below
         # may overwrite them, and close() puts the saved ones back.  A
@@ -176,6 +196,8 @@ class Session:
                 setattr(self.store, attr, saved)
         self.runtime.shutdown()
         self.store.unregister_runtime(self.runtime)
+        if self.store.obs is not None:
+            self.store.obs.registry.unregister_source(f"runtime/{self.label}")
 
     def __enter__(self):
         return self

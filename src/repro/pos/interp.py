@@ -80,7 +80,15 @@ class Interpreter:
     # -- execution -----------------------------------------------------------
 
     def execute(self, root_oid: int, method: str, args: tuple = (), ctx: Optional[ExecutionContext] = None):
-        ctx = ctx or ExecutionContext(self.store)
+        if ctx is None:
+            # the context carries the session's tenant identity so every
+            # demand span / stall sample this thread produces is attributed
+            # to the right tenant even under concurrent sessions
+            ctx = ExecutionContext(
+                self.store,
+                session_label=getattr(self.session, "label", ""),
+                stall_hist=getattr(self.session, "_tenant_stall_hist", None),
+            )
         return self._invoke(ctx, ObjRef(root_oid), method, tuple(args))
 
     def _invoke(self, ctx: ExecutionContext, receiver: ObjRef, method: str, args: tuple):

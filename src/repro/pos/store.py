@@ -613,11 +613,19 @@ class StoreMetrics:
 
 class ExecutionContext:
     """Tracks where the current application thread is executing (which Data
-    Service) so navigation costs can charge execution redirection."""
+    Service) so navigation costs can charge execution redirection.
 
-    def __init__(self, store: "ObjectStore"):
+    Multi-tenant attribution rides here too: ``session_label`` stamps the
+    demand spans this thread opens (per-call, never via shared tracer
+    state), and ``stall_hist`` — a pre-resolved per-tenant histogram — gets
+    every demand stall in addition to the per-service one."""
+
+    def __init__(self, store: "ObjectStore", session_label: str = "",
+                 stall_hist=None):
         self.store = store
         self.current_ds: Optional[int] = None
+        self.session_label = session_label
+        self.stall_hist = stall_hist
 
 
 class ObjectStore:
@@ -867,9 +875,13 @@ class ObjectStore:
         if obs is not None:
             stall = time.perf_counter() - t0
             self._stall_hists[ds.ds_id].record(stall)
+            if ctx is not None and ctx.stall_hist is not None:
+                ctx.stall_hist.record(stall)
             if obs.tracer is not None:
                 obs.tracer.demand(oid, ds.ds_id, t0, stall, did_load,
-                                  self.latency.disk_load_for(ds.ds_id))
+                                  self.latency.disk_load_for(ds.ds_id),
+                                  session=ctx.session_label if ctx is not None
+                                  else "")
         if self.fault is not None:
             self.fault.tick()
         return ds, did_load
@@ -934,8 +946,8 @@ class ObjectStore:
 
     # -- prefetch-path access ----------------------------------------------
 
-    def prefetch_access(self, oid: int, origin: str = "",
-                        rfo: bool = False) -> PersistentObject:
+    def prefetch_access(self, oid: int, origin: str = "", rfo: bool = False,
+                        session: str = "") -> PersistentObject:
         """Per-oid prefetch: load ``oid`` into its own Data Service's memory
         (no execution redirection: 'dataClay ... loads the object where it
         is stored').  This is the legacy one-task-per-oid dispatch target
@@ -949,8 +961,8 @@ class ObjectStore:
             return self.record(oid)  # no reachable replica: skip quietly
         tr = self.obs.tracer if self.obs is not None else None
         if tr is not None:
-            tr.predicted([oid], origin)
-            tr.dispatched([oid], ds.ds_id, tr.new_batch())
+            tr.predicted([oid], origin, session=session)
+            tr.dispatched([oid], ds.ds_id, tr.new_batch(), session=session)
             t_q = time.perf_counter()
             tr.claimed([oid], ds.ds_id, t=t_q)
         try:
@@ -958,7 +970,8 @@ class ObjectStore:
         except ServiceCrashed:
             self._note_service_down(ds.ds_id)
             self._failover_redispatch(
-                ds.ds_id, [oid], rfo=frozenset([oid]) if rfo else frozenset())
+                ds.ds_id, [oid], rfo=frozenset([oid]) if rfo else frozenset(),
+                session=session)
             return self.record(oid)
         if tr is not None:
             if did_load:
@@ -976,7 +989,8 @@ class ObjectStore:
 
     def prefetch_batch(self, oids: Iterable[int], runtime=None,
                        origin: str = "", rfo: Iterable[int] = (),
-                       priorities: Optional[dict[int, float]] = None) -> int:
+                       priorities: Optional[dict[int, float]] = None,
+                       session: str = "") -> int:
         """Batched, placement-aware prefetch dispatch: group the predicted
         ``oids`` (already in predicted-need order) by owning Data Service,
         dedupe each group against that service's cache *and* in-flight loads
@@ -1024,7 +1038,7 @@ class ObjectStore:
         for ds_id, batch in ordered:
             ds = self.services[ds_id]
             if tr is not None:
-                tr.predicted(batch, origin)
+                tr.predicted(batch, origin, session=session)
             if runtime is not None and priorities is not None:
                 prio = max((priorities.get(o, 0.0) for o in batch),
                            default=0.0)
@@ -1033,13 +1047,14 @@ class ObjectStore:
                         tr.dropped(batch, "admission")
                     continue
             if tr is not None:
-                tr.dispatched(batch, ds_id, tr.new_batch())
+                tr.dispatched(batch, ds_id, tr.new_batch(), session=session)
             try:
                 todo = ds.claim_prefetch_batch(batch)
             except ServiceCrashed:
                 self._note_service_down(ds_id)
                 self._failover_redispatch(ds_id, batch, runtime=runtime,
-                                          origin=origin, rfo=rfo)
+                                          origin=origin, rfo=rfo,
+                                          session=session)
                 continue
             if tr is not None:
                 if todo:
@@ -1124,7 +1139,8 @@ class ObjectStore:
 
     def _failover_redispatch(self, from_ds: int, oids: list[int],
                              runtime=None, origin: str = "failover",
-                             rfo: frozenset = frozenset()) -> int:
+                             rfo: frozenset = frozenset(),
+                             session: str = "") -> int:
         """Re-dispatch prefetch oids that were claimed by (or headed for) a
         service that died before landing them.  Routing now avoids the dead
         service, so the batch re-groups onto surviving replicas; with
@@ -1140,7 +1156,8 @@ class ObjectStore:
             tr.instant("prefetch-failover", service=from_ds, oids=len(oids))
         return self.prefetch_batch(oids, runtime=runtime,
                                    origin=origin or "failover",
-                                   rfo=rfo.intersection(oids))
+                                   rfo=rfo.intersection(oids),
+                                   session=session)
 
     # -- bookkeeping ---------------------------------------------------------
 

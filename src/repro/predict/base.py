@@ -210,14 +210,20 @@ class Predictor:
             rfo = frozenset()
         store = self.session.store
         origin = f"{self.name}:{context}" if context else self.name
+        # per-call span attribution: the session's label travels with every
+        # dispatch instead of living on shared tracer state, so concurrent
+        # tenants' spans interleave correctly
+        label = getattr(self.session, "label", "")
         if self._dispatch_mode() == "batch":
             store.prefetch_batch(out, runtime=self.session.runtime,
                                  origin=origin, rfo=rfo,
-                                 priorities=priorities or None)
+                                 priorities=priorities or None,
+                                 session=label)
         else:
             self.session.runtime.fan_out(
                 lambda oid: store.prefetch_access(oid, origin=origin,
-                                                  rfo=oid in rfo), out
+                                                  rfo=oid in rfo,
+                                                  session=label), out
             )
         return out
 

@@ -509,6 +509,15 @@ class VirtualReplay:
         self.tracer = tracer
         if tracer is not None and tracer.meter is None:
             tracer.meter = self.obs_meter
+        # -- multi-tenant attribution (predict.loadsim) ----------------------
+        # the loadsim driver time-multiplexes several tenants over one
+        # engine (shared disks/caches/executor = the interference model) by
+        # setting ``active_tenant`` around each event; prefetched lines
+        # remember which tenant scheduled them so an eviction-before-use
+        # can be charged to the tenant whose working set was destroyed
+        self.active_tenant = ""
+        self._pf_owner: dict[int, str] = {}
+        self.evicted_by_tenant: dict[str, int] = {}
 
     # -- cache mechanics ----------------------------------------------------
 
@@ -581,6 +590,13 @@ class VirtualReplay:
         self._evicted_ever.add(victim_oid)
         if victim.source == "pf" and not victim.used:
             self.evicted_before_use += 1
+            owner = self._pf_owner.pop(victim_oid, "")
+            if owner:
+                # interference: the tenant who prefetched this line lost it
+                # before ever using it (evicted by whoever overflowed the
+                # shared budget)
+                self.evicted_by_tenant[owner] = \
+                    self.evicted_by_tenant.get(owner, 0) + 1
         if victim.dirty:
             # the deferred cost of the write path: the flush occupies a
             # disk slot now, delaying whatever loads queue behind it
@@ -654,6 +670,10 @@ class VirtualReplay:
             self._evicted_ever.add(oid)
             if entry.source == "pf" and not entry.used:
                 self.evicted_before_use += 1
+                owner = self._pf_owner.pop(oid, "")
+                if owner:
+                    self.evicted_by_tenant[owner] = \
+                        self.evicted_by_tenant.get(owner, 0) + 1
             if tr is not None:
                 tr.evicted(oid, t=sc.crash_at)
         pend, self.inflight[i] = dict(self.inflight[i]), {}
@@ -735,6 +755,8 @@ class VirtualReplay:
             start, done = self.disks[ds_i].schedule(issue_t)
             self._exec_slots[slot] = done  # worker busy until the load lands
             self.inflight[ds_i][oid] = (start, done)
+            if self.active_tenant:
+                self._pf_owner[oid] = self.active_tenant
             if oid in rfo:
                 self._rfo_pending[ds_i].add(oid)
             self.prefetch_loads += 1
@@ -798,6 +820,8 @@ class VirtualReplay:
                 start, done = disk.schedule(issue_t)
                 batch_done = max(batch_done, done)
                 self.inflight[ds_i][oid] = (start, done)
+                if self.active_tenant:
+                    self._pf_owner[oid] = self.active_tenant
                 if oid in rfo:
                     self._rfo_pending[ds_i].add(oid)
                 self.prefetch_loads += 1
@@ -842,6 +866,7 @@ class VirtualReplay:
                     self.hidden_seconds += disk_s
                 self.timely += 1
             entry.used = True
+            self._pf_owner.pop(oid, None)  # used: no longer an unused-pf line
             if write:
                 self.write_hits += 1
             self.stall_hist.record(0.0)
@@ -856,6 +881,7 @@ class VirtualReplay:
             self.hidden_seconds += max(0.0, disk_s - stall)
             self.t = done
             self.partial += 1
+            self._pf_owner.pop(oid, None)
             self._insert(ds_i, oid, "pf", used=True)
             entry = self.caches[ds_i].get(oid)
             self._land_rfo(ds_i, oid)  # an RFO load lands dirty (owned)
@@ -1368,6 +1394,36 @@ def write_csv(results: Sequence[ReplayResult], path: str) -> str:
     return path
 
 
+def _loadsim_main(args) -> None:
+    """``--tenants N``: the virtual-clock mirror of benchmarks/loadgen.py.
+    Deterministic for a given argument set — the committed loadgen.csv's
+    virtual rows are byte-reproducible (wall_s cells stay empty)."""
+    from .loadsim import run_loadsim, write_loadgen_csv
+
+    capacities = [int(c) for c in args.cache_capacity.split(",") if c != ""]
+    dispatch = args.dispatch.split(",")[0].strip() or "batch"
+    report = run_loadsim(
+        tenants=args.tenants, arrival=args.arrival, jobs=args.jobs,
+        seed=args.seed, mode=args.mode, dispatch=dispatch,
+        cache_capacity=capacities[0] if capacities else 128,
+        shared_budget=args.shared_budget or not capacities,
+        policy=args.cache_policy.split(",")[0],
+        max_outstanding=args.max_outstanding,
+        admission_threshold=args.admission_threshold,
+    )
+    agg = report.rows()[-1]
+    print(f"# loadsim tenants={report.tenants} arrival={report.arrival} "
+          f"mode={report.mode} dispatch={report.dispatch}")
+    print(f"#   ops={agg['ops']} mean_stall={agg['stall_mean_s']}s "
+          f"fairness={report.fairness_ratio:.2f} "
+          f"evicted_before_use={agg['evicted_before_use']} "
+          f"shed={agg['admission_shed']}")
+    if not args.no_csv:
+        path = os.path.join(args.out, "loadgen.csv")
+        write_loadgen_csv(path, report.rows(), append=args.append)
+        print(f"# wrote {path} ({len(report.rows())} rows)")
+
+
 def main(argv: Optional[list[str]] = None) -> None:
     import argparse
 
@@ -1416,7 +1472,33 @@ def main(argv: Optional[list[str]] = None) -> None:
     ap.add_argument("--no-csv", action="store_true", help="print tables only")
     ap.add_argument("--fast", action="store_true",
                     help="only the fastest-to-trace apps (incl. the mutating bank run)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="run the multi-tenant load simulation instead of the "
+                         "single-tenant sweep: N concurrent sessions over one "
+                         "shared store on the virtual clock (predict.loadsim); "
+                         "writes <out>/loadgen.csv")
+    ap.add_argument("--arrival", default="closed",
+                    help="loadsim arrival process: 'closed' (exponential think "
+                         "between jobs) or 'poisson:RATE' (open, aggregate RATE "
+                         "jobs/s split across tenants)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="loadsim jobs per tenant")
+    ap.add_argument("--mode", default="capre",
+                    help="loadsim predictor mode for every tenant")
+    ap.add_argument("--max-outstanding", type=int, default=0,
+                    help="loadsim admission-control bound (0 = unbounded); "
+                         "mirrors PrefetchRuntime.admit on the modeled pool")
+    ap.add_argument("--admission-threshold", type=float, default=0.0,
+                    help="static priority that bypasses a full admission queue")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="loadsim RNG seed (mix assignment, arrivals, think)")
+    ap.add_argument("--append", action="store_true",
+                    help="append loadsim rows to an existing loadgen.csv "
+                         "(CI matrix legs share one artifact)")
     args = ap.parse_args(argv)
+    if args.tenants > 0:
+        _loadsim_main(args)
+        return
     apps = ("bank", "bank_write", "wordcount", "kmeans") if args.fast else tuple(
         a for a in args.apps.split(",") if a
     )

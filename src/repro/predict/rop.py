@@ -70,6 +70,7 @@ class Rop(Predictor):
         if self.session is not None:
             store = self.session.store
             runtime = self.session.runtime
+            label = getattr(self.session, "label", "")
             if self._dispatch_mode() == "batch":
                 # collect the frontier via peek (schema walk, no I/O), then
                 # one deduped, need-ordered request per Data Service
@@ -77,13 +78,16 @@ class Rop(Predictor):
                     out = self._frontier(root_oid, lambda _ref: None)
                     self.overhead.predictions += len(out)
                     store.prefetch_batch(out, runtime=runtime,
-                                         origin=f"rop:miss-{root_oid}")
+                                         origin=f"rop:miss-{root_oid}",
+                                         session=label)
 
                 runtime.fan_out(bfs_batch, [oid])
                 return []
 
             def bfs(root_oid: int) -> None:
-                fetched = self._frontier(root_oid, store.prefetch_access)
+                fetched = self._frontier(
+                    root_oid,
+                    lambda ref: store.prefetch_access(ref, session=label))
                 self.overhead.predictions += len(fetched)
 
             runtime.fan_out(bfs, [oid])

@@ -71,14 +71,16 @@ class _CountingStore:
     ``Overhead`` ledger — the generated prefetch closures cannot do it
     themselves."""
 
-    def __init__(self, store, overhead, rfo_enabled=True):
+    def __init__(self, store, overhead, rfo_enabled=True, session_label=""):
         self._store = store
         self._overhead = overhead
         self._rfo_enabled = rfo_enabled
+        self._session_label = session_label
 
     def prefetch_access(self, oid: int, rfo: bool = False):
         self._overhead.predictions += 1
-        return self._store.prefetch_access(oid, rfo=rfo and self._rfo_enabled)
+        return self._store.prefetch_access(oid, rfo=rfo and self._rfo_enabled,
+                                           session=self._session_label)
 
     def __getattr__(self, name):
         return getattr(self._store, name)
@@ -135,7 +137,8 @@ class StaticCapre(Predictor):
                 # through a counting proxy so the online ledger is
                 # comparable with the miners' (which count via _emit)
                 store = _CountingStore(self.session.store, self.overhead,
-                                       getattr(self.session.config, "rfo", True))
+                                       getattr(self.session.config, "rfo", True),
+                                       getattr(self.session, "label", ""))
                 runtime = self.session.runtime
                 self.session.runtime.schedule(lambda: fn(store, runtime, this_oid))
             return []
@@ -201,6 +204,7 @@ class StaticCapre(Predictor):
     def _submit_expansion(self, roots, origin: str = "capre") -> None:
         store, runtime = self.session.store, self.session.runtime
         rfo_enabled = getattr(self.session.config, "rfo", True)
+        label = getattr(self.session, "label", "")
 
         dispatched = self._dispatched if self._memo_active(store) else None
 
@@ -214,7 +218,8 @@ class StaticCapre(Predictor):
                     self.overhead.predictions += len(seg)
                     store.prefetch_batch(seg, runtime=runtime, origin=origin,
                                          rfo=frozenset(seg_rfo),
-                                         priorities=dict(seg_prio) or None)
+                                         priorities=dict(seg_prio) or None,
+                                         session=label)
                     seg.clear()
                     seg_rfo.clear()
                     seg_prio.clear()

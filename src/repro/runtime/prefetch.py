@@ -46,6 +46,7 @@ class StreamMetrics:
     wasted_bytes: int = 0  # prefetched but never used
     batch_dispatches: int = 0  # pool submissions made by batched group fetches
     dedup_suppressed: int = 0  # paths suppressed pre-submission (cached/in-flight)
+    fetch_timeouts: int = 0  # in-flight waits that expired; served via sync fallback
 
 
 class HostParamStore:
@@ -110,6 +111,7 @@ class WeightStreamer:
         dispatch: str = "batch",
         registry=None,
         tracer=None,
+        fetch_timeout: float = 30.0,
     ):
         self.store = store
         self.plan = plan
@@ -131,7 +133,9 @@ class WeightStreamer:
         self._used: set[str] = set()  # paths actually served to compute
         self._lock = threading.Lock()
         self._workers = max(1, workers)
-        self._pool = ThreadPoolExecutor(max_workers=workers, thread_name_prefix="stream")
+        self._pool = ThreadPoolExecutor(max_workers=self._workers,
+                                        thread_name_prefix="stream")
+        self.fetch_timeout = fetch_timeout
         self._groups = self._group_order()
         self._done = False
         self.group_log: list[int] = []  # entered group indices (miner food)
@@ -319,8 +323,24 @@ class WeightStreamer:
             self._fetch_async(path)
             with self._lock:
                 ev = self._inflight.get(path)
-        if ev is not None:
-            ev.wait(timeout=30.0)
+        landed = ev.wait(timeout=self.fetch_timeout) if ev is not None else True
+        with self._lock:
+            arr = self._cache.get(path)
+        if not landed or arr is None:
+            # The in-flight wait expired (or the fetch errored and released
+            # its event without landing anything): the old code did
+            # ``self._cache[path]`` here and turned a slow lane into a bare
+            # KeyError after the timeout.  Serve the compute thread with a
+            # synchronous fetch instead — correctness over latency — and
+            # count the incident so a saturated pool is visible.
+            arr = self.store.fetch(path)
+            with self._lock:
+                self._cache[path] = arr
+                self.metrics.fetches += 1
+                self.metrics.bytes_moved += arr.nbytes
+                if not landed:
+                    self.metrics.fetch_timeouts += 1
+            was_inflight = False  # the demand path did the full load itself
         stall = time.perf_counter() - t0
         self.metrics.stalls += 1
         self.metrics.stall_seconds += stall
@@ -330,8 +350,7 @@ class WeightStreamer:
             tr.demand(self._span_id(path), STREAM_PID, t0, stall,
                       full_load=not was_inflight,
                       disk_load_s=self._disk_s(path))
-        with self._lock:
-            return self._cache[path]
+        return arr
 
     # -- the injected scheduling points ------------------------------------------
 

@@ -261,26 +261,28 @@ def _live_write_run(dispatch, rfo=True):
         # landings are exact
         s.predictor.on_method_entry("BankManagement.setAllTransCustomers", root)
         assert s.drain(15.0)
-    return client.store.snapshot_metrics()
+    return sorted(client.store.prefetched_oids), client.store.snapshot_metrics()
 
 
 @pytest.mark.parametrize("dispatch", ["per-oid", "batch"])
 def test_live_rfo_prefetches_dirty_allocate(dispatch):
     """Both live dispatch modes honor the hint RFO marks: prefetched update
     sites land dirty, and the counter flows into snapshot_metrics."""
-    metrics = _live_write_run(dispatch)
+    oids, metrics = _live_write_run(dispatch)
     assert metrics["prefetch_loads"] > 0
     assert metrics["rfo_prefetches"] > 0
     # RFO marks never change the emitted oid set itself: both modes still
-    # request byte-identical prefetch sets (checked at ZERO latency where
-    # the race with demand is moot)
-    per_oid = _run_live("per-oid", "capre", workload="setAllTransCustomers")
-    batch = _run_live("batch", "capre", workload="setAllTransCustomers")
-    assert per_oid[0] == batch[0]
+    # request byte-identical prefetch sets.  Compared on the direct hint
+    # dispatch above — running the full mutating workload live and
+    # comparing two runs' sets is a scheduling race (the app's writes to
+    # trans.cust race the expansion's field reads, so under CPU contention
+    # the two runs legitimately expand different customers)
+    other = "batch" if dispatch == "per-oid" else "per-oid"
+    assert oids == _live_write_run(other)[0]
 
 
 def test_live_rfo_disabled_by_session_config():
-    metrics = _live_write_run("batch", rfo=False)
+    _oids, metrics = _live_write_run("batch", rfo=False)
     assert metrics["prefetch_loads"] > 0
     assert metrics["rfo_prefetches"] == 0
 

@@ -243,12 +243,16 @@ def wall_bank():
                         session_label="bank-wall") as s:
         wl.run_once(s, root)
         assert s.drain(10.0)
+        # snapshot while the session is live: its runtime/<label> source is
+        # registered now and unregistered on close (the lifecycle the
+        # multi-tenant registry fix enforces)
+        live_snap = obs.snapshot()
     client.store.reset_runtime_state()  # terminates never-demanded residents
-    return obs, client, root, wl
+    return obs, client, root, wl, live_snap
 
 
 def test_live_store_spans_all_reach_exactly_one_terminal_state(wall_bank):
-    obs, client, root, wl = wall_bank
+    obs, client, root, wl, _live_snap = wall_bank
     spans = obs.tracer.spans()
     assert spans and obs.tracer.active_count() == 0
     assert check_span_invariants(spans) == []
@@ -266,10 +270,14 @@ def test_live_store_spans_all_reach_exactly_one_terminal_state(wall_bank):
 
 
 def test_live_store_demand_stall_histograms_and_sources(wall_bank):
-    obs, _client, _root, _wl = wall_bank
+    obs, _client, _root, _wl, live_snap = wall_bank
+    # a live session exposes its runtime as a source...
+    assert any(k.startswith("runtime/") for k in live_snap["sources"])
     snap = obs.snapshot()
     assert "store" in snap["sources"]
-    assert any(k.startswith("runtime/") for k in snap["sources"])
+    # ...and close() unregisters it: no leaked source pinning a shut-down
+    # PrefetchRuntime after the session ends
+    assert not any(k.startswith("runtime/") for k in snap["sources"])
     merged = obs.registry.merged_histogram("demand_stall_s")
     assert merged is not None and merged.count > 0
     assert snap["self"]["events"] > 0  # instrumentation metered itself
@@ -305,7 +313,7 @@ def test_replay_spans_hold_the_same_invariants():
 
 
 def test_wall_and_virtual_spans_populate_identical_fields(wall_bank):
-    obs, _c, _r, _w = wall_bank
+    obs, _c, _r, _w, _snap = wall_bank
     tr = Tracer()
     _virtual_bank(tracer=tr)
 

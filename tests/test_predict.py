@@ -365,7 +365,23 @@ def test_streamer_resolves_modes_through_registry():
     with _pytest.raises(KeyError, match="unknown prefetch mode"):
         _tiny_streamer(mode="nope")
     ws = _tiny_streamer(mode="markov-miner", warm_group_trace=[-1, 0, 1])
-    ws.run_plan()
+
+    def drain_inflight(_gi, _arrays):
+        # A prefetch only counts as a hit if the pool thread lands it
+        # before the compute thread's next get() — a pure scheduling race
+        # on a loaded box.  Waiting out the in-flight fetches here (the
+        # policy registers them synchronously in on_group_start, and
+        # run_plan calls compute_fn before the next group's gets) makes
+        # the mined g0->g1 prefetch a deterministic cache hit.
+        while True:
+            with ws._lock:
+                evs = list(ws._inflight.values())
+            if not evs:
+                return
+            for ev in evs:
+                ev.wait(5.0)
+
+    ws.run_plan(compute_fn=drain_inflight)
     assert ws.metrics.prefetch_hits >= 1  # mined -1->0->1 transitions fired
     assert ws.group_log == [-1, 0, 1]
     ws.close()
