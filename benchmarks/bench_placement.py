@@ -38,6 +38,8 @@ from repro.predict.evaluate import (
     _catalog,
     evaluate_workload,
     record_workload,
+    replay,
+    replay_baseline,
     write_csv,
 )
 
@@ -58,6 +60,57 @@ def run_matrix(apps, placements, scenarios, replication: int,
             )
             results.extend(rows)
     return results
+
+
+def run_recovery_sweep(app: str, replication: int = 2,
+                       mode: str = "static-capre", crash_frac: float = 0.25,
+                       revive_fracs=(0.30, 0.40, 0.50, 0.60, 0.80)) -> list:
+    """Readmission timing sweep: crash service 0 at ``crash_frac`` of the
+    clean run, revive it at each of ``revive_fracs`` — stall-vs-time around
+    the readmission.  The later the revive, the more missed writes
+    anti-entropy has to resync on readmission (``resync_lines`` grows with
+    the revive point), so run this on a mutating traversal
+    (``bank_write``): on a read-only app the surviving replica absorbs the
+    whole working set before any revive point and every row is identical.
+    Returns ``ReplayResult`` rows whose scenario names carry the revive
+    fraction (``crash+revive@0.40``)."""
+    from repro.pos.client import SessionConfig
+    from repro.pos.latency import FailureScenario
+    from repro.predict import make_pos_predictor
+
+    wl = _catalog()[app]
+    client, _root, traces = record_workload(wl, runs=2)
+    train, eval_ = traces[0], traces[-1]
+    store = client.store
+    store.rebuild_placement("round-robin", replication=replication)
+    reg = client.logic_module.registered[wl.name]
+    nofault = replay_baseline(eval_, store)
+    end_t = nofault.t - nofault.stall_seconds
+    results = []
+    for frac in revive_fracs:
+        sc = FailureScenario(name=f"crash+revive@{frac:.2f}",
+                             crash_service=0, crash_at=end_t * crash_frac,
+                             revive_at=end_t * frac)
+        predictor = make_pos_predictor(mode, config=SessionConfig())
+        predictor.warm(train.accesses)
+        results.append(replay(eval_, predictor, store, reg, scenario=sc))
+    return results
+
+
+def summarize_recovery(results) -> list[str]:
+    lines = []
+    header = (f"{'scenario':<18} {'stall_s':>8} {'failovers':>9} "
+              f"{'readmit':>7} {'resync':>6} {'p99_s':>8}")
+    lines.append(header)
+    lines.append("-" * len(header))
+    for r in results:
+        o = r.overhead
+        lines.append(
+            f"{r.scenario:<18} {r.stall_seconds:>8.4f} {r.failovers:>9d} "
+            f"{o['readmissions']:>7d} {o['resync_lines']:>6d} "
+            f"{r.stall_p99_s:>8.4f}"
+        )
+    return lines
 
 
 def _dispatch_total(results, app: str, placement: str) -> Optional[int]:
@@ -106,6 +159,9 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="replica count (>= 2 lets faults fail over)")
     ap.add_argument("--modes", default="static-capre,rop",
                     help="predictors to replay (empty = full registry)")
+    ap.add_argument("--recovery-sweep", action="store_true",
+                    help="also sweep crash-at-T / revive-at-T+D readmission "
+                         "timings on the first app (stall vs revive point)")
     ap.add_argument("--out", default=os.path.join("artifacts", "predict",
                                                   "placement.csv"))
     ap.add_argument("--no-csv", action="store_true")
@@ -120,6 +176,16 @@ def main(argv: Optional[list[str]] = None) -> int:
                          modes=modes)
     for line in summarize(results, apps, placements):
         print(line)
+    if args.recovery_sweep:
+        # Prefer a mutating traversal: revive timing only moves the numbers
+        # when the dead replica misses writes (resync on readmission).
+        sweep_app = ("bank_write" if "bank_write" in _catalog() else apps[0])
+        recovery = run_recovery_sweep(sweep_app, replication=args.replication,
+                                      mode=(modes or ("static-capre",))[0])
+        print(f"# recovery sweep ({sweep_app}, crash@0.25, revive swept):")
+        for line in summarize_recovery(recovery):
+            print(line)
+        results.extend(recovery)
     if not args.no_csv:
         path = write_csv(results, args.out)
         print(f"# wrote {path} ({len(results)} rows)")

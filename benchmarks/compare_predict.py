@@ -93,6 +93,13 @@ PLACEMENT_COLUMNS = ("placement", "replication", "scenario", "failovers")
 OPT_COLUMNS = ("rfo_prefetches", "truncated_hints", "hint_priority_mean",
                "ownership_upgrades", "exec_delayed")
 
+#: the partition-tolerant recovery columns (ISSUE 10: write quorums, hedged
+#: reads, readmission + anti-entropy resync) — a replay.csv missing them
+#: was produced by a pre-recovery harness and must fail the gate
+RECOVERY_COLUMNS = ("write_quorum", "readmissions", "resync_lines",
+                    "hedged_reads", "hedge_wins", "quorum_writes",
+                    "quorum_acks", "quorum_retries", "quorum_failures")
+
 #: p99 stall gating: fail when the fresh tail exceeds the baseline by more
 #: than ``rel`` (fractional) with an absolute floor of ``abs`` seconds —
 #: the floor keeps sub-millisecond tails from tripping on exact-arithmetic
@@ -110,6 +117,7 @@ def _clean_regime(r: dict) -> bool:
         (r.get("scenario") or "no-fault") == "no-fault"
         and (r.get("placement") or "round-robin") == "round-robin"
         and (r.get("replication") or "1") == "1"
+        and (r.get("write_quorum") or "1") == "1"
     )
 
 
@@ -168,6 +176,12 @@ def compare(current_path: str, baseline_path: str, tolerance: float = 0.02,
     if missing_cols:
         failures.append(
             f"{current_path}: static-optimizer columns missing from header: "
+            f"{', '.join(missing_cols)}"
+        )
+    missing_cols = [c for c in RECOVERY_COLUMNS if c not in cur_fields]
+    if missing_cols:
+        failures.append(
+            f"{current_path}: recovery columns missing from header: "
             f"{', '.join(missing_cols)}"
         )
     for key in sorted(baseline):

@@ -1,0 +1,259 @@
+"""Recovery-behaviour gate over the failure-scenario replay artifact
+(the ``compare_predict.py`` of the partition-tolerance subsystem).
+
+Runs against a fresh ``replay.csv`` produced by the extended scenario
+sweep (``--scenario no-fault,straggler,crash,partition,crash+revive,
+straggler+hedge --write-quorum 1,2 --replication 2``) and asserts the
+recovery machinery actually engaged — a sweep that silently stops
+partitioning, readmitting, hedging, or charging quorums still produces a
+well-formed CSV, and only these semantic gates catch it:
+
+  * the recovery columns must be present in the header (same presence
+    check ``compare_predict`` applies to the committed baseline file);
+  * every ``partition`` row must show ``failovers > 0`` (cross-partition
+    reads failed over to reachable replicas) and ``readmissions >= 1``
+    (the heal at the scheduled instant readmitted the cut services);
+  * every ``crash+revive`` row must show ``readmissions >= 1`` (the
+    revived service rejoined routing; failovers are not required — a
+    non-prefetching predictor can have nothing in flight at the crash);
+  * hedging must not worsen the worst tail: per (app, workload, quorum)
+    the max ``stall_p99_s`` over the ``straggler+hedge`` rows must not
+    exceed the max over the matching ``straggler`` rows, and across the
+    file at least one hedge must actually have fired
+    (``hedged_reads > 0``);
+  * every no-fault ``write_quorum > 1`` row on a mutating workload
+    (``writes > 0``) must charge the quorum (``quorum_writes > 0``) and
+    stall strictly more than its matching W=1 row — synchronous replica
+    acks are a consistency cost the virtual clock must price, never hide;
+  * with ``--clean-baseline``, the sweep's clean-regime rows (no-fault,
+    round-robin, replication 1, write-quorum 1) must be byte-identical on
+    shared virtual-clock columns to the committed ``baseline.csv`` rows
+    with the same key (wall-clock timing columns are exempt) — fault
+    plumbing must be inert when no fault is scheduled.
+
+Usage: PYTHONPATH=src python -m benchmarks.compare_recovery \
+    artifacts/predict/scenarios-round-robin/replay.csv \
+    [--clean-baseline artifacts/predict/baseline.csv]
+"""
+
+from __future__ import annotations
+
+import csv
+import sys
+
+from benchmarks.compare_predict import RECOVERY_COLUMNS, _clean_regime
+
+# everything that identifies a cell except the fault regime itself
+BaseKey = tuple[str, ...]
+
+#: columns measured on (or scaled by) the wall clock — legitimately
+#: different on every run, so the clean-regime identity check skips them;
+#: every other column comes off the virtual clock and must match exactly
+WALL_COLUMNS = frozenset(
+    {"train_seconds", "obs_seconds", "calib_scale", "calibrated_stall_s"})
+
+
+def _load(path: str) -> tuple[list[dict], list[str]]:
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        rows = list(reader)
+        fields = list(reader.fieldnames or [])
+    return rows, fields
+
+
+def _base_key(r: dict) -> BaseKey:
+    return (r["app"], r["workload"], r["predictor"], r["cache_capacity"],
+            r.get("policy") or "lru", r.get("dispatch") or "per-oid",
+            r.get("placement") or "round-robin", r.get("replication") or "1")
+
+
+def _label(r: dict) -> str:
+    return "/".join(_base_key(r)) + (
+        f"@{r.get('scenario') or 'no-fault'}/W={r.get('write_quorum') or '1'}"
+    )
+
+
+def _int(r: dict, col: str) -> int:
+    v = r.get(col)
+    return int(v) if v not in (None, "", "-") else 0
+
+
+def _float(r: dict, col: str):
+    v = r.get(col)
+    return float(v) if v not in (None, "", "-") else None
+
+
+def check(rows: list[dict], fields: list[str]) -> list[str]:
+    failures: list[str] = []
+    missing = [c for c in RECOVERY_COLUMNS if c not in fields]
+    if missing:
+        failures.append(
+            f"recovery columns missing from header: {', '.join(missing)}")
+        return failures
+
+    # index: (base key, scenario, write_quorum) -> row; scenarios compare
+    # against their peers inside the same base cell
+    by_cell: dict[tuple[BaseKey, str, str], dict] = {}
+    for r in rows:
+        by_cell[(_base_key(r), r.get("scenario") or "no-fault",
+                 r.get("write_quorum") or "1")] = r
+
+    total_hedged = 0
+    saw_partition = saw_revive = saw_hedge = saw_quorum = False
+    for r in rows:
+        scenario = r.get("scenario") or "no-fault"
+        wq = r.get("write_quorum") or "1"
+        if scenario == "partition":
+            saw_partition = True
+            if _int(r, "failovers") <= 0:
+                failures.append(f"{_label(r)}: partition ran with zero "
+                                "failovers (cross-partition reads never "
+                                "failed over)")
+            if _int(r, "readmissions") < 1:
+                failures.append(f"{_label(r)}: partition healed without a "
+                                "readmission")
+        elif scenario == "crash+revive":
+            # failovers may legitimately be zero here: a non-prefetching
+            # predictor can have nothing in flight at the crash instant and
+            # routing just avoids the dead replica — the readmission is the
+            # invariant
+            saw_revive = True
+            if _int(r, "readmissions") < 1:
+                failures.append(f"{_label(r)}: revived service was never "
+                                "readmitted")
+        elif scenario == "straggler+hedge":
+            saw_hedge = True
+            total_hedged += _int(r, "hedged_reads")
+            if by_cell.get((_base_key(r), "straggler", wq)) is None:
+                failures.append(f"{_label(r)}: no matching straggler row to "
+                                "compare the hedged tail against")
+        if scenario == "no-fault" and wq != "1" and _int(r, "writes") > 0:
+            saw_quorum = True
+            if _int(r, "quorum_writes") <= 0:
+                failures.append(f"{_label(r)}: W={wq} write workload charged "
+                                "no quorum writes")
+            base = by_cell.get((_base_key(r), scenario, "1"))
+            if base is None:
+                failures.append(f"{_label(r)}: no matching W=1 row to price "
+                                "the quorum against")
+            else:
+                cost = _float(r, "stall_seconds")
+                free = _float(base, "stall_seconds")
+                if cost is not None and free is not None and cost <= free:
+                    failures.append(
+                        f"{_label(r)}: W={wq} stall {cost:.4f}s <= W=1 "
+                        f"{free:.4f}s — quorum acks came for free")
+    if saw_hedge and total_hedged == 0:
+        failures.append("straggler+hedge rows present but no hedge ever "
+                        "fired (hedged_reads == 0 across the file)")
+    # the hedge gate is on the WORST tail per (app, workload, quorum): the
+    # race bounds the slowest demand read near hedge_delay + one healthy
+    # service time, so the max p99 across predictors must not grow; single
+    # cells with an already-tiny tail can wiggle either way because the
+    # winning replica reshapes downstream routing, so they are not gated
+    # individually
+    worst: dict[tuple, dict[str, float]] = {}
+    for r in rows:
+        scenario = r.get("scenario") or "no-fault"
+        if scenario not in ("straggler", "straggler+hedge"):
+            continue
+        p99 = _float(r, "stall_p99_s")
+        if p99 is None:
+            continue
+        group = worst.setdefault(
+            (r["app"], r["workload"], r.get("write_quorum") or "1"), {})
+        group[scenario] = max(group.get(scenario, 0.0), p99)
+    for (app, workload, wq), group in sorted(worst.items()):
+        if "straggler" in group and "straggler+hedge" in group:
+            if group["straggler+hedge"] > group["straggler"]:
+                failures.append(
+                    f"{app}/{workload}/W={wq}: worst hedged stall_p99_s "
+                    f"{group['straggler+hedge']:.6f} > worst unhedged "
+                    f"{group['straggler']:.6f} — hedging made the slowest "
+                    "predictor's tail worse")
+    for name, seen in (("partition", saw_partition),
+                       ("crash+revive", saw_revive),
+                       ("straggler+hedge", saw_hedge)):
+        if not seen:
+            failures.append(f"no {name} rows in the sweep — scenario matrix "
+                            "lost a leg")
+    if not saw_quorum:
+        failures.append("no W>1 mutating no-fault rows in the sweep — the "
+                        "quorum pricing leg is gone")
+    return failures
+
+
+def check_clean_baseline(rows: list[dict], baseline_path: str) -> list[str]:
+    """Clean-regime rows of the sweep must be byte-identical, column by
+    shared column, to the committed baseline rows with the same key: the
+    recovery plumbing (fault-event timeline, quorum hooks, hedge race)
+    must cost nothing when no fault is scheduled."""
+    base_rows, base_fields = _load(baseline_path)
+    base_by_key = {
+        (r["app"], r["workload"], r["predictor"], r["cache_capacity"],
+         r.get("policy") or "lru", r.get("dispatch") or "per-oid"): r
+        for r in base_rows if _clean_regime(r)
+    }
+    failures: list[str] = []
+    compared = 0
+    for r in rows:
+        if not _clean_regime(r):
+            continue
+        key = (r["app"], r["workload"], r["predictor"], r["cache_capacity"],
+               r.get("policy") or "lru", r.get("dispatch") or "per-oid")
+        base = base_by_key.get(key)
+        if base is None:
+            continue  # sweep params outside the baseline sweep; nothing to pin
+        compared += 1
+        for col in base_fields:
+            if col not in r or col in WALL_COLUMNS:
+                continue
+            if (r.get(col) or "") != (base.get(col) or ""):
+                failures.append(
+                    f"{'/'.join(key)}: clean-regime {col} drifted from "
+                    f"baseline: {r.get(col)!r} != {base.get(col)!r}")
+    if compared == 0:
+        failures.append(
+            f"no clean-regime rows overlapped {baseline_path} — the "
+            "identity check compared nothing")
+    return failures
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="freshly generated scenario-sweep replay.csv")
+    ap.add_argument("--clean-baseline", default=None, metavar="BASELINE_CSV",
+                    help="also require clean-regime rows to match this "
+                         "committed baseline byte-for-byte on shared columns")
+    ap.add_argument("--clean-only", action="store_true",
+                    help="run only the clean-regime identity check (for a "
+                         "no-fault R=1/W=1 file that has no fault rows to "
+                         "hold the scenario gates to)")
+    args = ap.parse_args(argv)
+    if args.clean_only and not args.clean_baseline:
+        ap.error("--clean-only requires --clean-baseline")
+    rows, fields = _load(args.current)
+    failures = [] if args.clean_only else check(rows, fields)
+    if args.clean_baseline:
+        failures += check_clean_baseline(rows, args.clean_baseline)
+    if failures:
+        print("RECOVERY REGRESSION:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    if args.clean_only:
+        print(f"recovery gates: clean-regime rows of {args.current} are "
+              f"byte-identical to {args.clean_baseline} on shared columns")
+    else:
+        n_fault = sum(1 for r in rows
+                      if (r.get("scenario") or "no-fault") != "no-fault")
+        print(f"recovery gates: {len(rows)} rows ({n_fault} fault-regime) — "
+              "partition failover/readmission, hedged tail, and quorum "
+              "pricing all engaged")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

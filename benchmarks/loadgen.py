@@ -90,7 +90,9 @@ def _tenant_worker(client: POSClient, tn: _TenantRun, wl, root: int,
         tn.wall_s = time.perf_counter() - t0
         tn.shed = session.runtime.stats()["admission_dropped"]
     except Exception as exc:  # surface, don't hang the join
-        tn.error = f"{type(exc).__name__}: {exc}"
+        import traceback
+
+        tn.error = f"{type(exc).__name__}: {exc}\n{traceback.format_exc()}"
     finally:
         session.close()
 
@@ -102,7 +104,11 @@ def run_loadgen(args) -> list[dict]:
 
     client = POSClient(n_services=args.services, latency=BENCH_LATENCY,
                        cache_capacity=args.cache_capacity,
-                       shared_budget=args.cache_capacity > 0)
+                       shared_budget=args.cache_capacity > 0,
+                       replication=args.replication)
+    if args.scenario == "crash" and args.replication < 2:
+        raise SystemExit("--scenario crash needs --replication >= 2 "
+                         "(with one replica the crashed data is simply gone)")
     obs = Observability(tracing=True)
     client.store.attach_obs(obs)
     roots: dict[str, int] = {}
@@ -141,12 +147,24 @@ def run_loadgen(args) -> list[dict]:
         threads.append(th)
         th.start()
 
+    crash_timer = None
+    if args.scenario == "crash":
+        # silent crash mid-run: nobody is told, so failovers must come from
+        # the demand path tripping over ServiceCrashed (the fast path) or
+        # the heartbeat monitor timing the corpse out (the slow path)
+        crash_timer = threading.Timer(
+            args.crash_after,
+            lambda: client.store.crash_service(0, announce=False))
+        crash_timer.daemon = True
+        crash_timer.start()
     run_t0 = time.perf_counter()
     start_t[0] = run_t0
     barrier.wait(timeout=30.0)
     for th in threads:
         th.join()
     run_wall = time.perf_counter() - run_t0
+    if crash_timer is not None:
+        crash_timer.cancel()
 
     failed = [tn for tn in tenants if tn.error]
     if failed:
@@ -167,7 +185,12 @@ def run_loadgen(args) -> list[dict]:
         "shared_budget": args.cache_capacity > 0,
         "max_outstanding": args.max_outstanding,
         "fairness_ratio": "", "seed": args.seed,
+        "scenario": args.scenario,
     }
+    # per-tenant failover attribution: the store charges each failover to
+    # the session label whose demand access re-routed (crash legs assert
+    # every failover lands on a real tenant, never the empty label)
+    failovers_by = dict(client.store.failovers_by_session)
     rows = []
     means = []
     total_stall = 0.0
@@ -189,6 +212,7 @@ def run_loadgen(args) -> list[dict]:
             stall_total_s=round(hist.sum, 9),
             evicted_before_use=evicted.get(tn.label, 0),
             admission_shed=tn.shed, wall_s=round(tn.wall_s, 3),
+            failovers=failovers_by.get(tn.label, 0),
         )
         rows.append(row)
     fairness = (max(means) / max(min(means), 1e-12)) if means else 0.0
@@ -201,6 +225,7 @@ def run_loadgen(args) -> list[dict]:
         evicted_before_use=sum(evicted.values()),
         admission_shed=sum(tn.shed for tn in tenants),
         fairness_ratio=round(fairness, 4), wall_s=round(run_wall, 3),
+        failovers=client.store.metrics.failovers,
     )
     rows.append(agg)
     return rows
@@ -230,6 +255,16 @@ def main(argv=None) -> None:
                     help="parallel prefetch workers per session (kept small: "
                          "N tenants each own a pool)")
     ap.add_argument("--services", type=int, default=4)
+    ap.add_argument("--replication", type=int, default=1,
+                    help="replica count per object (primary + ring "
+                         "successors); crash legs need >= 2")
+    ap.add_argument("--scenario", default="no-fault",
+                    choices=("no-fault", "crash"),
+                    help="'crash' silently kills service 0 mid-run "
+                         "(--crash-after seconds in) and relies on failover")
+    ap.add_argument("--crash-after", type=float, default=0.05,
+                    help="seconds after the start barrier before the crash "
+                         "leg kills service 0")
     ap.add_argument("--think-mean", type=float, default=5e-3,
                     help="closed-loop mean think time between jobs, seconds")
     ap.add_argument("--seed", type=int, default=0)

@@ -212,13 +212,16 @@ class POSClient:
 
     def __init__(self, n_services: int = 4, latency=None, cache_capacity: int = 0,
                  cache_policy: str = "lru", shared_budget: bool = False,
-                 placement: str = "round-robin", replication: int = 1):
+                 placement: str = "round-robin", replication: int = 1,
+                 write_quorum: int = 1, hedge: bool = False,
+                 hedge_delay: Optional[float] = None):
         from .latency import ZERO
 
         self.store = ObjectStore(
             n_services=n_services, latency=latency or ZERO, cache_capacity=cache_capacity,
             cache_policy=cache_policy, shared_budget=shared_budget,
             placement=placement, replication=replication,
+            write_quorum=write_quorum, hedge=hedge, hedge_delay=hedge_delay,
         )
         self.logic_module = LogicModule()
 

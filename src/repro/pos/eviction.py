@@ -288,29 +288,57 @@ class SharedBudget:
     """One global line budget drawn on by every Data Service (the
     shared-memory-budget mode): a single policy instance orders all resident
     lines store-wide, and overflow evicts the globally-worst line wherever
-    it lives.  ``owner`` maps each resident oid to the object holding its
-    cache line (a ``DataService``, or a Data-Service index in the replay
-    engine); ``lock`` is the one cache lock every service shares in this
-    mode, so cross-service victim selection is race-free."""
+    it lives.  ``owner`` maps each resident oid to the *set* of objects
+    holding a copy of its cache line (``DataService`` instances, or
+    Data-Service indices in the replay engine) — with replication >= 2 the
+    same oid can be resident on several replicas at once (failover and
+    hedged reads land second copies), and all copies share one budget line:
+    the policy tracks the oid once, and eviction drops every copy together.
+    ``lock`` is the one cache lock every service shares in this mode, so
+    cross-service victim selection is race-free."""
 
     def __init__(self, capacity: int, policy: str = DEFAULT_POLICY, **kwargs):
         self.capacity = capacity
         self.policy = make_policy(policy, capacity=capacity, **kwargs)
-        self.owner: dict[int, object] = {}
+        self.owner: dict[int, set] = {}
         self.lock = threading.Lock()
 
     def note_insert(self, oid: int, owner, prefetch: bool = False, used: bool = False) -> None:
-        self.owner[oid] = owner
-        self.policy.note_insert(oid, prefetch=prefetch, used=used)
+        holders = self.owner.get(oid)
+        if holders is None:
+            self.owner[oid] = {owner}
+            self.policy.note_insert(oid, prefetch=prefetch, used=used)
+        else:
+            # an additional replica copy of an already-tracked line: bump
+            # the existing policy entry instead of re-inserting (a second
+            # note_insert would double-register the line in stateful
+            # policies like prefetch-aware)
+            holders.add(owner)
+            self.policy.note_access(oid, prefetch=prefetch)
 
-    def note_remove(self, oid: int) -> None:
-        self.owner.pop(oid, None)
-        self.policy.note_remove(oid)
+    def note_remove(self, oid: int, owner=None) -> None:
+        """One holder dropped its copy (``owner``), or — with no owner —
+        the line vanished everywhere.  The policy forgets the oid only when
+        the last copy goes: a surviving replica's copy must stay evictable,
+        or its next touch resurrects an ownerless policy entry and a later
+        ``pick_victim`` crashes on it."""
+        holders = self.owner.get(oid)
+        if holders is None:
+            return
+        if owner is not None:
+            holders.discard(owner)
+        else:
+            holders.clear()
+        if not holders:
+            del self.owner[oid]
+            self.policy.note_remove(oid)
 
     def overflowed(self) -> bool:
         return bool(self.capacity) and len(self.owner) > self.capacity
 
-    def pick_victim(self) -> tuple[object, int]:
+    def pick_victim(self) -> tuple[set, int]:
+        """Choose the globally-worst line; returns the full holder set —
+        the caller evicts the line from every holder."""
         victim = self.policy.pick_victim()
         return self.owner.pop(victim), victim
 

@@ -197,17 +197,43 @@ class FailureScenario:
     crash_service: Optional[int] = None
     crash_at: float = float("inf")
     failover_delay: float = 2e-3
+    # network partition: ``partition`` is a tuple of service-id groups; group
+    # 0 is the client-side majority (unlisted services implicitly belong to
+    # it).  Between ``partition_at`` and ``heal_at`` every service outside
+    # group 0 is unreachable: demand/prefetch traffic to it fails like a
+    # crash, but its state survives — at ``heal_at`` it readmits with a warm
+    # cache and anti-entropy resyncs the dirty lines it missed.
+    partition: tuple[tuple[int, ...], ...] = ()
+    partition_at: float = float("inf")
+    heal_at: float = float("inf")
+    # crash+revive: a service crashed at ``crash_at`` comes back (cold cache)
+    # at ``revive_at`` and readmits into routing
+    revive_at: float = float("inf")
+    # hedged reads: demand misses issue to a second replica after a
+    # hedge delay and take the first response.  ``hedge_delay`` 0.0 means
+    # "derive" (the store/replay derives it from the latency model's p99).
+    hedge: bool = False
+    hedge_delay: float = 0.0
 
     @property
     def is_fault(self) -> bool:
-        return bool(self.straggler) or self.crash_service is not None
+        return (bool(self.straggler) or self.crash_service is not None
+                or bool(self.partition))
 
     def straggler_scales(self) -> dict[int, float]:
         return dict(self.straggler)
 
+    def cut_services(self) -> set[int]:
+        """Services unreachable from the client side while partitioned
+        (everything outside group 0)."""
+        if not self.partition:
+            return set()
+        return {ds for grp in self.partition[1:] for ds in grp}
+
 
 #: scenario vocabulary bench_placement / evaluate sweep by name
-SCENARIO_NAMES = ("no-fault", "straggler", "crash")
+SCENARIO_NAMES = ("no-fault", "straggler", "crash", "partition",
+                  "crash+revive", "straggler+hedge")
 
 
 def make_scenario(name: str, end_t: float = 0.0, ds_id: int = 0,
@@ -216,7 +242,12 @@ def make_scenario(name: str, end_t: float = 0.0, ds_id: int = 0,
     """Resolve a named regime: ``straggler`` makes ``ds_id`` run
     ``straggler_scale`` times slower on disk; ``crash`` kills ``ds_id`` at
     ``crash_frac`` of the no-fault baseline's end time ``end_t`` (mid-run,
-    so in-flight prefetch batches are caught on the dead service)."""
+    so in-flight prefetch batches are caught on the dead service);
+    ``partition`` isolates ``ds_id`` from the client-side majority between
+    25% and 70% of ``end_t`` (heal readmits it warm and resyncs missed
+    writes); ``crash+revive`` kills ``ds_id`` at 25% and revives it cold at
+    60%; ``straggler+hedge`` is the straggler regime with hedged demand
+    reads armed."""
     if name == "no-fault":
         return FailureScenario()
     if name == "straggler":
@@ -224,4 +255,16 @@ def make_scenario(name: str, end_t: float = 0.0, ds_id: int = 0,
     if name == "crash":
         return FailureScenario(name=name, crash_service=ds_id,
                                crash_at=end_t * crash_frac)
+    if name == "partition":
+        return FailureScenario(name=name, partition=((), (ds_id,)),
+                               partition_at=end_t * crash_frac,
+                               heal_at=end_t * 0.70)
+    if name == "crash+revive":
+        return FailureScenario(name=name, crash_service=ds_id,
+                               crash_at=end_t * crash_frac,
+                               revive_at=end_t * 0.60)
+    if name == "straggler+hedge":
+        return FailureScenario(name=name,
+                               straggler=((ds_id, straggler_scale),),
+                               hedge=True)
     raise KeyError(f"unknown failure scenario {name!r}; expected one of {SCENARIO_NAMES}")

@@ -58,6 +58,35 @@ class NoReplicaAvailable(RuntimeError):
         self.oid = oid
 
 
+class RetryExhausted(RuntimeError):
+    """The demand-path failover loop gave up after its bounded retries —
+    every routing attempt kept landing on dead/unreachable services.  A
+    full-outage oid now fails fast instead of spinning forever."""
+
+    def __init__(self, oid: int, attempts: int):
+        super().__init__(
+            f"demand load of oid {oid} exhausted {attempts} failover retries"
+        )
+        self.oid = oid
+        self.attempts = attempts
+
+
+class QuorumUnreachable(RuntimeError):
+    """A replicated write could not reach its W-of-R quorum (too many
+    replicas dead or across a partition) within the bounded retry budget.
+    The local update stands — the write degrades to sloppy — but the caller
+    is told consistency was not achieved."""
+
+    def __init__(self, oid: int, wanted: int, got: int):
+        super().__init__(
+            f"write quorum for oid {oid}: wanted {wanted} replicas, "
+            f"only {got} reachable"
+        )
+        self.oid = oid
+        self.wanted = wanted
+        self.got = got
+
+
 @dataclass
 class PersistentObject:
     oid: int
@@ -162,8 +191,9 @@ class DataService:
         flushes: list[tuple[DataService, int]] = []
         if self.budget is not None:
             while self.budget.overflowed():
-                vds, victim = self.budget.pick_victim()
-                vds._evict_line(victim, flushes)
+                holders, victim = self.budget.pick_victim()
+                for vds in holders:  # every replica copy shares the line
+                    vds._evict_line(victim, flushes)
         elif self.cache_capacity:
             while len(self.cache) > self.cache_capacity:
                 self._evict_line(self.policy.pick_victim(), flushes)
@@ -186,9 +216,17 @@ class DataService:
 
     def _flush(self, oid: int) -> None:
         """Write a dirty object back to disk (occupies a disk slot for
-        ``write_back`` seconds — the deferred cost of the write path)."""
+        ``write_back`` seconds — the deferred cost of the write path).  On a
+        crashed service the flush fails over to a live replica when one
+        exists (replication > 1); otherwise the in-memory update is lost —
+        counted, no longer silent."""
         if not self.alive:
-            return  # crashed: the in-memory update is simply lost
+            owner = self._owner
+            if owner is not None and owner._flush_failover(self.ds_id, oid):
+                return
+            if owner is not None:
+                owner._note_lost_write(self.ds_id, oid)
+            return
         with self._slots:
             self.latency.sleep(self.latency.write_back_for(self.ds_id))
         self.flushed_writes += 1
@@ -348,7 +386,7 @@ class DataService:
             self.alive = False
             for oid in self.cache:
                 if self.budget is not None:
-                    self.budget.note_remove(oid)
+                    self.budget.note_remove(oid, self)
                 else:
                     self.policy.note_remove(oid)
             self.cache.clear()
@@ -358,6 +396,14 @@ class DataService:
             self.dirty.clear()
             self._demand_waiting = 0
             self._demand_clear.set()
+
+    def revive(self) -> None:
+        """Bring a crashed service back to life with a COLD cache (crash
+        already cleared it): loads and claims succeed again.  Routing
+        readmission and anti-entropy resync are the owning store's job
+        (``ObjectStore.revive_service``)."""
+        with self._cache_lock:
+            self.alive = True
 
     # -- batched prefetch dispatch ------------------------------------------
 
@@ -540,7 +586,7 @@ class DataService:
         with self._cache_lock:
             for oid in self.cache:
                 if self.budget is not None:
-                    self.budget.note_remove(oid)
+                    self.budget.note_remove(oid, self)
                 else:
                     self.policy.note_remove(oid)
             self.cache.clear()
@@ -606,6 +652,17 @@ class StoreMetrics:
     failovers: int = 0  # demand retries / batch re-dispatches off a dead service
     services_crashed: int = 0  # crash_service invocations (fault injection)
     stragglers_flagged: int = 0  # services the straggler detector deprioritized
+    lost_writes: int = 0  # dirty flushes dropped on a dead service, no replica
+    failover_retries: int = 0  # demand failover attempts beyond the first
+    partitions: int = 0  # partition() invocations (fault injection)
+    readmissions: int = 0  # services readmitted to routing (heal / revive)
+    resync_lines: int = 0  # dirty lines anti-entropy replayed at readmission
+    hedged_reads: int = 0  # demand reads that issued a second-replica hedge
+    hedge_wins: int = 0  # hedged reads where the second replica answered first
+    quorum_writes: int = 0  # replicated writes that reached their W-of-R quorum
+    quorum_acks: int = 0  # synchronous replica acks charged (W-1 per write)
+    quorum_retries: int = 0  # quorum attempts that backed off and retried
+    quorum_failures: int = 0  # writes whose quorum stayed unreachable (sloppy)
 
     def snapshot(self) -> dict[str, int]:
         return dict(self.__dict__)
@@ -634,7 +691,9 @@ class ObjectStore:
     def __init__(self, n_services: int = 4, latency: LatencyModel = ZERO,
                  cache_capacity: int = 0, cache_policy: str = DEFAULT_POLICY,
                  shared_budget: bool = False,
-                 placement: str = DEFAULT_PLACEMENT, replication: int = 1):
+                 placement: str = DEFAULT_PLACEMENT, replication: int = 1,
+                 write_quorum: int = 1, hedge: bool = False,
+                 hedge_delay: Optional[float] = None):
         self.latency = latency
         self.cache_policy = cache_policy
         # shared-memory-budget mode: ``cache_capacity`` is one global line
@@ -669,6 +728,26 @@ class ObjectStore:
         # heartbeat monitor catches it — that window IS the failure model.
         self._down: set[int] = set()
         self._slow: set[int] = set()
+        # network partition ground truth: services currently unreachable
+        # from the client-side group (partition()/heal_partition()) —
+        # distinct from _down, which is *detected* state.  Traffic routed
+        # to a cut service fails exactly like a crash.
+        self._net_cut: set[int] = set()
+        # anti-entropy write log: replica -> oids whose writes it missed
+        # while dead/partitioned; resynced (flushed on the replica) at
+        # readmission.  Guarded by the metrics lock (writes hold it anyway).
+        self._missed_writes: dict[int, set[int]] = {}
+        # per-tenant failover attribution (session label -> count), for the
+        # multi-tenant harness; guarded by the metrics lock
+        self.failovers_by_session: dict[str, int] = {}
+        # write quorum: replicated writes wait for W-of-R synchronous
+        # replica acks (1 = async/sloppy, the legacy behavior)
+        self.write_quorum = max(1, min(write_quorum, self.replication))
+        # hedged reads: demand misses issue to a second replica after
+        # hedge_delay and take the first response (None = derive the delay
+        # from observed p99 stall, fallback 3x disk_load)
+        self.hedge = hedge
+        self.hedge_delay = hedge_delay
         self.fault = None  # optional runtime.fault.StoreFaultDetector
         self._oid_counter = itertools.count(1)
         self._metrics_lock = threading.Lock()
@@ -848,30 +927,55 @@ class ObjectStore:
         if self.access_listener is not None:
             self.access_listener(oid)
 
+    #: bounded demand-path failover budget: a full-outage oid fails fast
+    #: (RetryExhausted) instead of spinning on routing that keeps landing
+    #: on corpses; each retry backs off exponentially on failover_detect
+    MAX_FAILOVER_RETRIES = 4
+
     def _demand_load(self, ctx: Optional[ExecutionContext], oid: int,
                      write: bool = False) -> tuple[DataService, bool]:
         """Demand access with failover: route to a replica, redirect
         execution, load (or write-allocate).  A :class:`ServiceCrashed`
-        marks the service down, charges ``failover_detect``, and retries on
-        a surviving replica — :class:`NoReplicaAvailable` escapes when none
-        is left.  The stall histogram/span covers the WHOLE wait including
-        failed attempts (that is what the application thread experienced)."""
+        marks the service down, charges ``failover_detect`` (exponentially
+        backed off per retry), and retries on a surviving replica —
+        :class:`NoReplicaAvailable` escapes when none is left, and
+        :class:`RetryExhausted` after ``MAX_FAILOVER_RETRIES`` failed
+        attempts.  A service across a network partition fails exactly like
+        a crashed one.  With hedging armed, a read that outlives the hedge
+        delay issues to a second replica and takes the first response.  The
+        stall histogram/span covers the WHOLE wait including failed
+        attempts (that is what the application thread experienced)."""
         obs = self.obs
         t0 = time.perf_counter() if obs is not None else 0.0
+        attempts = 0
         while True:
             ds = self._route_demand(oid)
             self._redirect(ctx, ds)
             try:
-                did_load = ds.write(oid) if write else ds.load_into_memory(oid)
+                if ds.ds_id in self._net_cut:
+                    raise ServiceCrashed(ds.ds_id)
+                if self.hedge and not write:
+                    did_load, ds = self._hedged_load(oid, ds)
+                else:
+                    did_load = ds.write(oid) if write else ds.load_into_memory(oid)
                 break
-            except ServiceCrashed:
-                self._note_service_down(ds.ds_id)
+            except ServiceCrashed as exc:
+                attempts += 1
+                self._note_service_down(exc.ds_id)
+                label = ctx.session_label if ctx is not None else ""
                 with self._metrics_lock:
                     self.metrics.failovers += 1
+                    if attempts > 1:
+                        self.metrics.failover_retries += 1
+                    self.failovers_by_session[label] = (
+                        self.failovers_by_session.get(label, 0) + 1)
                 tr = obs.tracer if obs is not None else None
                 if tr is not None:
-                    tr.instant("demand-failover", service=ds.ds_id, oid=oid)
-                self.latency.sleep(self.latency.failover_detect)
+                    tr.instant("demand-failover", service=exc.ds_id, oid=oid)
+                if attempts > self.MAX_FAILOVER_RETRIES:
+                    raise RetryExhausted(oid, attempts) from exc
+                self.latency.sleep(
+                    self.latency.failover_detect * (2 ** (attempts - 1)))
         if obs is not None:
             stall = time.perf_counter() - t0
             self._stall_hists[ds.ds_id].record(stall)
@@ -885,6 +989,148 @@ class ObjectStore:
         if self.fault is not None:
             self.fault.tick()
         return ds, did_load
+
+    # -- hedged reads --------------------------------------------------------
+
+    def _hedge_delay_for(self, ds_id: int) -> float:
+        """The wait before a hedge fires: an explicit ``hedge_delay`` wins;
+        else the observed p99 demand stall on the primary service (needs
+        >= 32 samples so early noise cannot arm hair-trigger hedges); else
+        3x the nominal disk load — roughly where a queued-or-degraded load
+        separates from a healthy one."""
+        if self.hedge_delay is not None:
+            return self.hedge_delay
+        if self._stall_hists is not None:
+            hist = self._stall_hists.get(ds_id)
+            if hist is not None and hist.count >= 32:
+                (p99,) = hist.percentiles((0.99,))
+                if p99:
+                    return p99
+        return 3 * self.latency.disk_load
+
+    def _hedge_alt(self, oid: int, primary: DataService) -> Optional[DataService]:
+        """The second replica a hedged read would issue to: any reachable
+        replica other than the primary, least-queued first."""
+        reps = self._placement[oid]
+        alts = [i for i in reps
+                if i != primary.ds_id and i not in self._down
+                and i not in self._net_cut and self.services[i].alive]
+        if not alts:
+            return None
+        return self.services[min(
+            alts,
+            key=lambda i: (self.services[i]._demand_waiting
+                           + len(self.services[i]._inflight),
+                           reps.index(i)),
+        )]
+
+    def _hedged_load(self, oid: int,
+                     primary: DataService) -> tuple[bool, DataService]:
+        """Speculative-read demand load: issue to ``primary``; if it has not
+        answered within the hedge delay, issue the same load to a second
+        replica and take whichever answers first (both loads run to
+        completion — the loser's disk time is the price of the tail cut).
+        Returns ``(did_load, winning_service)``.  With no second replica
+        available this degrades to a plain load."""
+        alt = self._hedge_alt(oid, primary)
+        if alt is None:
+            return primary.load_into_memory(oid), primary
+        outcome: dict[str, Any] = {}
+        done = threading.Event()
+        lock = threading.Lock()
+
+        def _primary() -> None:
+            try:
+                dl = primary.load_into_memory(oid)
+                with lock:
+                    outcome.setdefault("win", (primary, dl))
+            except BaseException as exc:  # surfaced if the hedge loses too
+                with lock:
+                    outcome.setdefault("primary_error", exc)
+            done.set()
+
+        th = threading.Thread(target=_primary, daemon=True,
+                              name=f"hedge-primary-{primary.ds_id}")
+        th.start()
+        if done.wait(self._hedge_delay_for(primary.ds_id)):
+            with lock:
+                if "win" in outcome:
+                    ds, dl = outcome["win"]
+                    return dl, ds
+            # primary failed fast: the hedge below is also the failover
+        with self._metrics_lock:
+            self.metrics.hedged_reads += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("hedged-read", service=alt.ds_id, oid=oid)
+        try:
+            dl = alt.load_into_memory(oid)
+        except BaseException:
+            done.wait(5.0)
+            with lock:
+                if "win" in outcome:
+                    ds, dl = outcome["win"]
+                    return dl, ds
+            raise
+        with lock:
+            outcome.setdefault("win", (alt, dl))
+            ds, dl = outcome["win"]
+        if ds is alt:
+            with self._metrics_lock:
+                self.metrics.hedge_wins += 1
+        return dl, ds
+
+    # -- write quorum --------------------------------------------------------
+
+    #: bounded quorum wait: attempts before a replicated write gives up on
+    #: its W-of-R quorum and degrades to sloppy (QuorumUnreachable)
+    MAX_QUORUM_RETRIES = 4
+
+    def _await_write_quorum(self, oid: int, ds: DataService) -> None:
+        """Synchronous W-of-R replication for a write: wait until at least
+        ``write_quorum`` replicas are reachable (ground truth — acks need
+        live services, not routing guesses), charge one ``remote_hop`` per
+        extra ack, and propagate the dirty bit to the acking replicas'
+        resident lines.  Unreachable quorums retry with exponential backoff
+        (a healing partition can unblock a waiter), then surface as
+        :class:`QuorumUnreachable` — the local write stands (sloppy), the
+        caller learns consistency was not achieved."""
+        reps = self._placement[oid]
+        want = min(self.write_quorum, len(reps))
+        if want <= 1:
+            return
+        backoff = max(self.latency.failover_detect, self.latency.disk_load)
+        reachable: list[int] = []
+        for attempt in range(self.MAX_QUORUM_RETRIES + 1):
+            reachable = [r for r in reps
+                         if self.services[r].alive and r not in self._net_cut]
+            if len(reachable) >= want:
+                acks = want - 1
+                for _ in range(acks):
+                    self.latency.sleep(self.latency.remote_hop)
+                for r in reachable:
+                    if r == ds.ds_id:
+                        continue
+                    svc = self.services[r]
+                    with svc._cache_lock:
+                        if oid in svc.cache:
+                            svc.dirty.add(oid)
+                with self._metrics_lock:
+                    self.metrics.quorum_writes += 1
+                    self.metrics.quorum_acks += acks
+                return
+            if attempt == self.MAX_QUORUM_RETRIES:
+                break
+            with self._metrics_lock:
+                self.metrics.quorum_retries += 1
+            self.latency.sleep(backoff * (2 ** attempt))
+        with self._metrics_lock:
+            self.metrics.quorum_failures += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("quorum-unreachable", service=ds.ds_id, oid=oid,
+                       wanted=want, got=len(reachable))
+        raise QuorumUnreachable(oid, want, len(reachable))
 
     def app_access(self, ctx: ExecutionContext, oid: int) -> PersistentObject:
         """Navigate to ``oid`` on the application thread: redirect execution
@@ -914,6 +1160,9 @@ class ObjectStore:
         listeners — previously all of this was bypassed and mutating
         workloads undercounted demand."""
         ds, did_load = self._demand_load(ctx, oid, write=True)
+        if self.write_quorum > 1:
+            self._await_write_quorum(oid, ds)
+        reps = self._placement[oid]
         with self._metrics_lock:
             self.metrics.writes += 1
             if did_load:
@@ -923,6 +1172,15 @@ class ObjectStore:
             self.accessed_oids.add(oid)
             if self.trace is not None:
                 self.trace.append(write_event(oid))
+            # anti-entropy log: replicas that cannot see this write (dead
+            # or across the partition) resync the line at readmission
+            if len(reps) > 1:
+                for r in reps:
+                    if r == ds.ds_id:
+                        continue
+                    if (r in self._net_cut or r in self._down
+                            or not self.services[r].alive):
+                        self._missed_writes.setdefault(r, set()).add(oid)
         self._notify(oid, did_load)
         # per-object application processing charges on writes exactly like
         # reads — the virtual-clock replay does the same, keeping the two
@@ -966,6 +1224,8 @@ class ObjectStore:
             t_q = time.perf_counter()
             tr.claimed([oid], ds.ds_id, t=t_q)
         try:
+            if ds.ds_id in self._net_cut:
+                raise ServiceCrashed(ds.ds_id)
             did_load = ds.load_into_memory(oid, prefetch=True, rfo=rfo)
         except ServiceCrashed:
             self._note_service_down(ds.ds_id)
@@ -1049,6 +1309,8 @@ class ObjectStore:
             if tr is not None:
                 tr.dispatched(batch, ds_id, tr.new_batch(), session=session)
             try:
+                if ds_id in self._net_cut:
+                    raise ServiceCrashed(ds_id)
                 todo = ds.claim_prefetch_batch(batch)
             except ServiceCrashed:
                 self._note_service_down(ds_id)
@@ -1093,16 +1355,102 @@ class ObjectStore:
         if announce:
             self._note_service_down(ds_id)
 
+    def partition(self, groups: Iterable[Iterable[int]],
+                  announce: bool = True) -> None:
+        """Cut the network into ``groups`` of service ids: group 0 is the
+        client-side majority (services listed in no group implicitly belong
+        to it); every service outside group 0 becomes unreachable — demand
+        and prefetch traffic to it fails like :class:`ServiceCrashed` and
+        routing degrades to the reachable replicas.  Unlike a crash the cut
+        services keep their memory state: at ``heal_partition`` they rejoin
+        warm and resync only the writes they missed.  ``announce=False``
+        models an undetected cut (traffic keeps flowing until the error
+        path notices)."""
+        groups = [tuple(g) for g in groups]
+        cut = {ds_id for grp in groups[1:] for ds_id in grp}
+        self._net_cut = cut
+        with self._metrics_lock:
+            self.metrics.partitions += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("partition", cut=sorted(cut))
+        if announce:
+            for ds_id in cut:
+                self._note_service_down(ds_id)
+
+    def heal_partition(self) -> None:
+        """Heal the network cut: every cut service readmits into routing
+        (warm cache — nothing was lost, only unreachable) and anti-entropy
+        resyncs the dirty lines whose writes it missed."""
+        cut, self._net_cut = self._net_cut, set()
+        for ds_id in sorted(cut):
+            self._readmit(ds_id)
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("partition-heal", healed=sorted(cut))
+
+    def revive_service(self, ds_id: int) -> None:
+        """Bring a crashed service back: cold cache, healthy routing state,
+        heartbeat/straggler detector readmission, and anti-entropy resync
+        of the writes it missed while dead."""
+        self.services[ds_id].revive()
+        self._readmit(ds_id)
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("service-readmit", service=ds_id)
+
+    # back-compat alias (pre-recovery API)
     def restore_service(self, ds_id: int) -> None:
-        """Bring a crashed (or flagged) service back: empty cache, healthy
-        routing state, readmitted to the heartbeat monitor."""
-        ds = self.services[ds_id]
-        with ds._cache_lock:
-            ds.alive = True
+        self.revive_service(ds_id)
+
+    def _readmit(self, ds_id: int) -> None:
+        """Shared readmission path (heal + revive): routing forgets the
+        down/straggler flags, the fault detector resets the service's
+        baseline, missed writes resync, and the readmission is counted."""
         self._down.discard(ds_id)
         self._slow.discard(ds_id)
         if self.fault is not None:
             self.fault.readmit(ds_id)
+        resynced = self._resync_missed(ds_id)
+        with self._metrics_lock:
+            self.metrics.readmissions += 1
+            self.metrics.resync_lines += resynced
+
+    def _resync_missed(self, ds_id: int) -> int:
+        """Anti-entropy replay of the write log a returning replica missed:
+        each missed oid costs the replica one write-back (off the
+        application's critical path — charged on the replica's own disk
+        slots).  Returns the number of lines resynced."""
+        with self._metrics_lock:
+            missed = self._missed_writes.pop(ds_id, set())
+        ds = self.services[ds_id]
+        count = 0
+        for oid in sorted(missed):
+            if oid in ds.disk:
+                ds._flush(oid)
+                count += 1
+        return count
+
+    def _flush_failover(self, from_ds: int, oid: int) -> bool:
+        """A dirty flush landed on a dead service: perform the write-back
+        on a live reachable replica instead of dropping the update.  False
+        when no replica can take it (the caller counts a lost write)."""
+        reps = self._placement.get(oid, ())
+        for r in reps:
+            if r == from_ds:
+                continue
+            svc = self.services[r]
+            if svc.alive and r not in self._net_cut and oid in svc.disk:
+                svc._flush(oid)
+                return True
+        return False
+
+    def _note_lost_write(self, ds_id: int, oid: int) -> None:
+        with self._metrics_lock:
+            self.metrics.lost_writes += 1
+        tr = self.obs.tracer if self.obs is not None else None
+        if tr is not None:
+            tr.instant("lost-write", service=ds_id, oid=oid)
 
     def attach_fault_detection(self, **kwargs) -> "Any":
         """Wire the ``runtime.fault`` machinery (HeartbeatMonitor +
@@ -1227,6 +1575,8 @@ class ObjectStore:
             self.metrics = StoreMetrics()
             self.accessed_oids = set()
             self.prefetched_oids = set()
+            self.failovers_by_session = {}
+            self._missed_writes = {}
             if self.trace is not None:
                 self.trace = []
 

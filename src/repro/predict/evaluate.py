@@ -417,7 +417,8 @@ class VirtualReplay:
     def __init__(self, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
                  policy: str = DEFAULT_POLICY, shared_budget: bool = False,
                  dispatch: str = "per-oid", tracer=None, scenario=None,
-                 rfo_enabled: bool = True, executor_workers: int = 8):
+                 rfo_enabled: bool = True, executor_workers: int = 8,
+                 write_quorum: int = 1):
         from repro.obs import Histogram, Meter
 
         n = len(store.services)
@@ -449,9 +450,42 @@ class VirtualReplay:
         self.scenario = scenario
         scales = scenario.straggler_scales() if scenario is not None else {}
         self.dead: set[int] = set()
+        # services across the network cut (partitioned regimes): routed
+        # around like the dead, but their state survives — at heal they
+        # readmit warm and resync the writes they missed
+        self.cut: set[int] = set()
         self.failovers = 0  # in-flight prefetch loads re-dispatched off the corpse
         self.crash_lost = 0  # resident lines lost with the crashed cache
-        self._crash_applied = False
+        # recovery counters (mirror StoreMetrics)
+        self.readmissions = 0
+        self.resync_lines = 0
+        self.hedged_reads = 0
+        self.hedge_wins = 0
+        self.quorum_writes = 0
+        self.quorum_acks = 0
+        self.quorum_retries = 0
+        self.quorum_failures = 0
+        # replicated writes wait for W-of-R acks (1 = async/sloppy legacy)
+        self.write_quorum = max(1, write_quorum)
+        # anti-entropy write log: replica -> oids missed while dead/cut
+        self._missed_writes: dict[int, set[int]] = {}
+        # per-tenant failover attribution for the loadsim driver
+        self.failovers_by_tenant: dict[str, int] = {}
+        # fault timeline: the scenario's one-shot events, applied lazily in
+        # time order the moment the virtual clock passes each (so in-flight
+        # state at that instant is what each event catches)
+        self._fault_events: list[tuple[float, str]] = []
+        if scenario is not None:
+            inf = float("inf")
+            if scenario.crash_service is not None and scenario.crash_at < inf:
+                self._fault_events.append((scenario.crash_at, "crash"))
+                if scenario.revive_at < inf:
+                    self._fault_events.append((scenario.revive_at, "revive"))
+            if scenario.partition and scenario.partition_at < inf:
+                self._fault_events.append((scenario.partition_at, "partition"))
+                if scenario.heal_at < inf:
+                    self._fault_events.append((scenario.heal_at, "heal"))
+            self._fault_events.sort()
         self.disks = [VirtualDisk(latency, scale=scales.get(i, 1.0))
                       for i in range(n)]
         self.caches: list[dict[int, _CacheEntry]] = [{} for _ in range(n)]
@@ -576,8 +610,9 @@ class VirtualReplay:
             return
         if self.budget is not None:
             while self.budget.overflowed():
-                vds_i, victim_oid = self.budget.pick_victim()
-                self._evict(vds_i, victim_oid)
+                holders, victim_oid = self.budget.pick_victim()
+                for vds_i in sorted(holders):  # deterministic copy order
+                    self._evict(vds_i, victim_oid)
         else:
             while len(self.caches[ds_i]) > self.cache_capacity:
                 self._evict(ds_i, self.policies[ds_i].pick_victim())
@@ -616,10 +651,10 @@ class VirtualReplay:
 
         reps = self.store.replicas_of(oid)
         if len(reps) == 1:
-            if reps[0] in self.dead:
+            if reps[0] in self.dead or reps[0] in self.cut:
                 raise NoReplicaAvailable(oid, reps)
             return reps[0]
-        alive = [i for i in reps if i not in self.dead]
+        alive = [i for i in reps if i not in self.dead and i not in self.cut]
         if not alive:
             raise NoReplicaAvailable(oid, reps)
         for i in alive:
@@ -632,7 +667,7 @@ class VirtualReplay:
         """Prefetch routing: like ``_route`` but an unreachable object is
         skipped (None) instead of raising — demand surfaces real losses."""
         reps = self.store.replicas_of(oid)
-        alive = [i for i in reps if i not in self.dead]
+        alive = [i for i in reps if i not in self.dead and i not in self.cut]
         if not alive:
             return None
         if len(alive) == 1:
@@ -643,27 +678,39 @@ class VirtualReplay:
         return min(alive, key=lambda i: (min(self.disks[i]._slots),
                                          reps.index(i)))
 
-    def _maybe_crash(self) -> None:
-        """Apply the scenario's crash once the virtual clock reaches it:
-        the service's resident cache dies, its in-flight prefetch loads are
-        re-dispatched onto a surviving replica ``failover_delay`` after the
-        crash (mirroring ``_failover_redispatch`` on the live store), and
-        the application clock eats the detection delay once."""
+    def _advance_faults(self) -> None:
+        """Apply the scenario's one-shot fault events (crash, partition,
+        heal, revive) that the virtual clock has reached, in time order.
+        Each event may advance the clock (detection delays), so the loop
+        re-checks until no pending event is due."""
+        while self._fault_events and self.t >= self._fault_events[0][0]:
+            at, kind = self._fault_events.pop(0)
+            if kind == "crash":
+                self._apply_crash(at)
+            elif kind == "partition":
+                self._apply_partition(at)
+            elif kind == "heal":
+                self._apply_heal(at)
+            elif kind == "revive":
+                self._apply_revive(at)
+
+    def _apply_crash(self, at: float) -> None:
+        """The scenario's crash: the service's resident cache dies, its
+        in-flight prefetch loads are re-dispatched onto a surviving replica
+        ``failover_delay`` after the crash (mirroring
+        ``_failover_redispatch`` on the live store), and the application
+        clock eats the detection delay once."""
         sc = self.scenario
-        if (sc is None or sc.crash_service is None or self._crash_applied
-                or self.t < sc.crash_at):
-            return
-        self._crash_applied = True
         i = sc.crash_service
         self.dead.add(i)
         tr = self.tracer
         if tr is not None:
-            tr.instant("service-crash", service=i, t=sc.crash_at)
+            tr.instant("service-crash", service=i, t=at)
         cache = self.caches[i]
         for oid in list(cache):
             entry = cache.pop(oid)
             if self.budget is not None:
-                self.budget.note_remove(oid)
+                self.budget.note_remove(oid, i)
             else:
                 self.policies[i].note_remove(oid)
             self.crash_lost += 1
@@ -675,11 +722,22 @@ class VirtualReplay:
                     self.evicted_by_tenant[owner] = \
                         self.evicted_by_tenant.get(owner, 0) + 1
             if tr is not None:
-                tr.evicted(oid, t=sc.crash_at)
+                tr.evicted(oid, t=at)
         pend, self.inflight[i] = dict(self.inflight[i]), {}
         if tr is not None and pend:
-            tr.dropped(list(pend), "service-crash", t=sc.crash_at)
-        re_t = sc.crash_at + sc.failover_delay
+            tr.dropped(list(pend), "service-crash", t=at)
+        re_t = at + sc.failover_delay
+        self._redispatch(pend, re_t)
+        if tr is not None:
+            tr.instant("prefetch-failover", service=i, t=re_t,
+                       oids=len(pend))
+        self.t += sc.failover_delay  # the app notices the failover once
+
+    def _redispatch(self, pend, re_t: float) -> None:
+        """Re-dispatch in-flight prefetch loads lost to a crash/partition
+        onto reachable replicas at ``re_t`` (one failover per load, charged
+        to the tenant whose prefetch it was)."""
+        tr = self.tracer
         for oid in pend:
             alt = self._route_prefetch(oid)
             if alt is None:
@@ -687,6 +745,10 @@ class VirtualReplay:
             start, done = self.disks[alt].schedule(re_t)
             self.inflight[alt][oid] = (start, done)
             self.failovers += 1
+            owner = self._pf_owner.get(oid, "")
+            if owner:
+                self.failovers_by_tenant[owner] = \
+                    self.failovers_by_tenant.get(owner, 0) + 1
             self.prefetch_loads += 1
             if tr is not None:
                 tr.predicted([oid], "failover", t=re_t)
@@ -694,10 +756,165 @@ class VirtualReplay:
                 tr.claimed([oid], alt, t=re_t)
                 tr.loaded([oid], alt, self.disks[alt].last_slot,
                           re_t, start, done)
+
+    def _apply_partition(self, at: float) -> None:
+        """The scenario's network cut: services outside group 0 become
+        unreachable.  Their caches and disks survive (unlike a crash); the
+        client-side runtime re-dispatches the loads it was waiting on to
+        reachable replicas, and the app notices the cut once (one
+        detection failover, mirroring the first tripped demand access)."""
+        sc = self.scenario
+        cut = sc.cut_services()
+        self.cut |= cut
+        tr = self.tracer
         if tr is not None:
-            tr.instant("prefetch-failover", service=i, t=re_t,
-                       oids=len(pend))
-        self.t += sc.failover_delay  # the app notices the failover once
+            tr.instant("partition", t=at, cut=sorted(cut))
+        re_t = at + sc.failover_delay
+        for i in sorted(cut):
+            # leave the cut-side in-flight loads in place: they complete
+            # server-side and are warm when the partition heals — but the
+            # client cannot see them, so they also re-dispatch client-side
+            self._redispatch(dict(self.inflight[i]), re_t)
+        # detection: the first access that trips over the cut
+        self.failovers += 1
+        if self.active_tenant:
+            self.failovers_by_tenant[self.active_tenant] = \
+                self.failovers_by_tenant.get(self.active_tenant, 0) + 1
+        self.t += sc.failover_delay
+
+    def _apply_heal(self, at: float) -> None:
+        """Heal the cut: every cut service readmits WARM (its cache and the
+        loads that completed server-side survive) and anti-entropy resyncs
+        the dirty lines whose writes it missed (write-backs on its own disk
+        slots, off the app's critical path)."""
+        healed, self.cut = set(self.cut), set()
+        for i in sorted(healed):
+            self._materialize(i, at)
+            self.readmissions += 1
+            self._resync(i, at)
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("partition-heal", t=at, healed=sorted(healed))
+
+    def _apply_revive(self, at: float) -> None:
+        """The crashed service returns: COLD cache (the crash destroyed
+        it), rejoins routing, resyncs missed writes."""
+        i = self.scenario.crash_service
+        self.dead.discard(i)
+        self.readmissions += 1
+        self._resync(i, at)
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("service-readmit", service=i, t=at)
+
+    def _resync(self, ds_i: int, at: float) -> None:
+        """Anti-entropy replay of the write log a returning replica missed:
+        one write-back per missed line on the replica's own disk."""
+        missed = self._missed_writes.pop(ds_i, set())
+        for _oid in sorted(missed):
+            self.disks[ds_i].schedule_write_back(at)
+            self.resync_lines += 1
+            self.flushed_writes += 1
+
+    def _maybe_hedge(self, oid: int, ds_i: int,
+                     needed_at: float) -> tuple[int, float, float]:
+        """Demand-load dispatch with the hedge race applied on top."""
+        start, done = self.disks[ds_i].schedule(needed_at)
+        win, w_done = self._hedge_race(oid, ds_i, needed_at, done)
+        return win, start, w_done
+
+    def _hedge_race(self, oid: int, ds_i: int, needed_at: float,
+                    done: float) -> tuple[int, float]:
+        """Read hedging: if hedging is armed and the primary copy (a
+        demand load just scheduled, or a prefetch already in flight,
+        completing at ``done``) would not land within the hedge delay,
+        race a fresh demand read on a second replica issued ``delay``
+        after the need and take the first response.  Both disks stay
+        charged (the loser's work is real); the losing replica's line is
+        *not* retained (a shared budget keys lines by oid — one oid under
+        two owners would collide).  Returns the winning ``(service,
+        done)`` pair."""
+        sc = self.scenario
+        if sc is None or not sc.hedge:
+            return ds_i, done
+        delay = sc.hedge_delay or 3.0 * self.latency.disk_load
+        if done - needed_at <= delay:
+            return ds_i, done
+        reps = self.store.replicas_of(oid)
+        alts = [i for i in reps
+                if i != ds_i and i not in self.dead and i not in self.cut]
+        if not alts:
+            return ds_i, done
+        alt = min(alts, key=lambda i: (min(self.disks[i]._slots),
+                                       reps.index(i)))
+        _start, a_done = self.disks[alt].schedule(needed_at + delay)
+        self.hedged_reads += 1
+        won = a_done < done
+        if won:
+            self.hedge_wins += 1
+        if self.tracer is not None:
+            self.tracer.instant("hedged-read", service=alt,
+                                t=needed_at + delay, oid=oid, win=won)
+        if won:
+            return alt, a_done
+        return ds_i, done
+
+    def _note_missed_replicas(self, oid: int, ds_i: int) -> None:
+        """A dirty write whose replica set includes an unreachable service
+        goes into that service's missed-write log; readmission (heal or
+        revive) replays it via anti-entropy resync."""
+        if not self.dead and not self.cut:
+            return
+        for r in self.store.replicas_of(oid):
+            if r != ds_i and (r in self.dead or r in self.cut):
+                self._missed_writes.setdefault(r, set()).add(oid)
+
+    MAX_QUORUM_RETRIES = 4
+
+    def _await_quorum(self, oid: int, ds_i: int) -> None:
+        """Synchronous W-of-R write replication on the virtual clock: the
+        writer waits for ``write_quorum - 1`` replica acks, one remote hop
+        each, serialized on the app clock like the live store's ack waits
+        (the wait counts as stall, so ``end_t = t - stall`` stays anchored
+        on the quorum-free schedule).  An unreachable quorum retries with
+        exponential backoff — ``_advance_faults`` runs between attempts so
+        a scheduled heal can unblock the wait — and degrades to sloppy
+        replication when retries exhaust (the missed replicas resync at
+        readmission; the live store raises ``QuorumUnreachable`` instead)."""
+        reps = self.store.replicas_of(oid)
+        want = min(self.write_quorum, len(reps))
+        if want <= 1:
+            return
+        backoff = max(self.latency.failover_detect, self.latency.disk_load)
+        for attempt in range(self.MAX_QUORUM_RETRIES + 1):
+            reachable = [r for r in reps
+                         if r not in self.dead and r not in self.cut]
+            if len(reachable) >= want:
+                wait = (want - 1) * self.latency.remote_hop
+                self.t += wait
+                self.stall_seconds += wait
+                self.quorum_writes += 1
+                # W-1 synchronous replica acks per write — the same
+                # definition the live store's counter uses
+                self.quorum_acks += want - 1
+                for r in reachable:
+                    if r == ds_i:
+                        continue
+                    e = self.caches[r].get(oid)
+                    if e is not None:
+                        e.dirty = True  # replicated write dirties the copy
+                return
+            if attempt == self.MAX_QUORUM_RETRIES:
+                break
+            pause = backoff * (2 ** attempt)
+            self.t += pause
+            self.stall_seconds += pause
+            self.quorum_retries += 1
+            self._advance_faults()
+        self.quorum_failures += 1
+        if self.tracer is not None:
+            self.tracer.instant("quorum-unreachable", t=self.t, oid=oid,
+                                wanted=want)
 
     # -- the two event kinds -------------------------------------------------
 
@@ -715,7 +932,7 @@ class VirtualReplay:
         workers.  ``rfo`` oids land dirty (read-for-ownership);
         ``priorities`` orders batched per-service dispatch and feeds the
         mean-priority artifact column."""
-        self._maybe_crash()
+        self._advance_faults()
         if not self.rfo_enabled:
             rfo = frozenset()
         if priorities:
@@ -839,7 +1056,7 @@ class VirtualReplay:
         whatever part of the disk load prefetching did not hide.  A write
         to an uncached object write-allocates — the same demand load a read
         pays — and always leaves the line dirty."""
-        self._maybe_crash()
+        self._advance_faults()
         ds_i = self._route(oid)
         if self.cur_ds != ds_i:
             self.t += self.latency.remote_hop
@@ -875,7 +1092,12 @@ class VirtualReplay:
                           disk_s, t=needed_at)
         elif oid in self.inflight[ds_i]:
             # predicted, still in flight: the app waits out the remainder
+            # (a straggling in-flight load is exactly what hedging cuts —
+            # a fresh demand read on another replica can beat it)
             _start, done = self.inflight[ds_i].pop(oid)
+            orig = ds_i
+            ds_i, done = self._hedge_race(oid, ds_i, needed_at, done)
+            self.cur_ds = ds_i
             stall = done - needed_at
             self.stall_seconds += stall
             self.hidden_seconds += max(0.0, disk_s - stall)
@@ -884,6 +1106,10 @@ class VirtualReplay:
             self._pf_owner.pop(oid, None)
             self._insert(ds_i, oid, "pf", used=True)
             entry = self.caches[ds_i].get(oid)
+            if ds_i != orig and oid in self._rfo_pending[orig]:
+                # the RFO mark travels with the object, not the replica
+                self._rfo_pending[orig].discard(oid)
+                self._rfo_pending[ds_i].add(oid)
             self._land_rfo(ds_i, oid)  # an RFO load lands dirty (owned)
             self.stall_hist.record(stall)
             if tr is not None:
@@ -892,7 +1118,9 @@ class VirtualReplay:
         else:
             # unpredicted (or evicted): full demand load, queueing behind
             # whatever the prefetcher has piled onto this service's disk
-            _start, done = self.disks[ds_i].schedule(needed_at)
+            # (with hedging armed, a slow primary races a second replica)
+            ds_i, _start, done = self._maybe_hedge(oid, ds_i, needed_at)
+            self.cur_ds = ds_i  # execution follows the replica that answered
             stall = done - needed_at
             self.stall_seconds += stall
             self.t = done
@@ -915,6 +1143,10 @@ class VirtualReplay:
                 self.stall_seconds += self.latency.remote_hop
                 self.ownership_upgrades += 1
             entry.dirty = True
+        if write:
+            self._note_missed_replicas(oid, ds_i)
+            if self.write_quorum > 1:
+                self._await_quorum(oid, ds_i)
         self.t += self.latency.think
 
     def write(self, oid: int) -> None:
@@ -965,6 +1197,7 @@ class ReplayResult:
     # topology + failure regime the row was replayed under
     placement: str = "round-robin"
     replication: int = 1
+    write_quorum: int = 1
     scenario: str = "no-fault"
     failovers: int = 0
     overhead: dict = field(default_factory=dict)
@@ -977,16 +1210,18 @@ class ReplayResult:
 
 def replay_baseline(
     trace: RecordedTrace, store, latency: LatencyModel = REPLAY, cache_capacity: int = 0,
-    policy: str = DEFAULT_POLICY, shared_budget: bool = False, scenario=None
+    policy: str = DEFAULT_POLICY, shared_budget: bool = False, scenario=None,
+    write_quorum: int = 1
 ) -> VirtualReplay:
     """The no-prefetch reference: every cold (or thrashed-out) demand event
     pays the full disk load (writes included — write-allocate + dirty
     evictions).  Same trace, same clock, same eviction policy, no
     predictions.  A fault ``scenario`` applies to the baseline too — the
-    reference for a faulted replay is the same faults without prefetch."""
+    reference for a faulted replay is the same faults without prefetch
+    (likewise ``write_quorum``: the reference prices the same consistency)."""
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
                            policy=policy, shared_budget=shared_budget,
-                           scenario=scenario)
+                           scenario=scenario, write_quorum=write_quorum)
     for ev in as_events(trace.events):
         if ev.kind == ACCESS:
             engine.access(ev.oid)
@@ -1010,6 +1245,7 @@ def replay(
     calibration=None,
     scenario=None,
     rfo: bool = True,
+    write_quorum: int = 1,
 ) -> ReplayResult:
     """Drive ``predictor`` through the recorded event stream on the virtual
     clock and score what its prefetches would have hidden.  Pass a
@@ -1022,7 +1258,8 @@ def replay(
     predictor.attach(store, reg)
     engine = VirtualReplay(store, latency=latency, cache_capacity=cache_capacity,
                            policy=policy, shared_budget=shared_budget, dispatch=dispatch,
-                           tracer=tracer, scenario=scenario, rfo_enabled=rfo)
+                           tracer=tracer, scenario=scenario, rfo_enabled=rfo,
+                           write_quorum=write_quorum)
     name = predictor.name
     predicted: set[int] = set()
     accessed: set[int] = set()
@@ -1058,6 +1295,7 @@ def replay(
         baseline_stall_seconds = replay_baseline(
             trace, store, latency=latency, cache_capacity=cache_capacity,
             policy=policy, shared_budget=shared_budget, scenario=scenario,
+            write_quorum=write_quorum,
         ).stall_seconds
     saved = (
         100.0 * (1.0 - engine.stall_seconds / baseline_stall_seconds)
@@ -1087,6 +1325,15 @@ def replay(
     # + span bookkeeping), charged to the ledger like any other overhead
     overhead["obs_seconds"] = engine.obs_meter.seconds
     overhead["obs_events"] = engine.obs_meter.events
+    # recovery accounting (partition/readmission/quorum/hedging regimes)
+    overhead["readmissions"] = engine.readmissions
+    overhead["resync_lines"] = engine.resync_lines
+    overhead["hedged_reads"] = engine.hedged_reads
+    overhead["hedge_wins"] = engine.hedge_wins
+    overhead["quorum_writes"] = engine.quorum_writes
+    overhead["quorum_acks"] = engine.quorum_acks
+    overhead["quorum_retries"] = engine.quorum_retries
+    overhead["quorum_failures"] = engine.quorum_failures
     p50, p99, p999 = engine.stall_hist.percentiles((0.5, 0.99, 0.999))
     scale = (calibration.scale_for(_calibration_app_key(trace.app_name, trace.workload))
              if calibration is not None else 1.0)
@@ -1128,6 +1375,7 @@ def replay(
         calibrated_stall_s=engine.stall_seconds * scale,
         placement=getattr(store, "placement_name", "round-robin"),
         replication=getattr(store, "replication", 1),
+        write_quorum=engine.write_quorum,
         scenario=scenario.name if scenario is not None else "no-fault",
         failovers=engine.failovers,
         overhead=overhead,
@@ -1156,11 +1404,12 @@ def evaluate_workload(
     replication: int = 1,
     scenarios: Sequence[str] = ("no-fault",),
     rfo: bool = True,
+    write_quorums: Sequence[int] = (1,),
 ) -> list[ReplayResult]:
     """Record (train + eval runs), then replay every requested predictor
-    under every (cache capacity, eviction policy, dispatch mode, failure
-    scenario) — miners warmed on the train run, everyone scored on the eval
-    run.  ``rop_depth`` is only consulted when no ``config`` is supplied;
+    under every (cache capacity, eviction policy, write quorum, dispatch
+    mode, failure scenario) — miners warmed on the train run, everyone
+    scored on the eval run.  ``rop_depth`` is only consulted when no ``config`` is supplied;
     pass ``recorded`` to reuse traces from ``record_catalog``.  Recording
     is placement-independent (the event stream is oids in program order),
     so one recorded trace replays under every placement/replication via
@@ -1180,49 +1429,57 @@ def evaluate_workload(
     results = []
     for capacity in cache_capacities:
         for policy in policies:
-            # the no-prefetch reference never dispatches: one baseline
-            # serves every dispatch mode of this (capacity, policy) cell
-            nofault_baseline = replay_baseline(
-                eval_, store, latency=latency, cache_capacity=capacity,
-                policy=policy, shared_budget=shared_budget,
-            )
-            # crash-time anchor: the stall-free floor (think + hops) is the
-            # one duration every replay of this cell shares — a fraction of
-            # the *baseline* end would fall past the end of a well-prefetched
-            # run (which finishes several times faster) and never fire
-            end_t = nofault_baseline.t - nofault_baseline.stall_seconds
-            for scenario_name in scenarios:
-                scenario = make_scenario(scenario_name, end_t=end_t)
-                if not scenario.is_fault:
-                    scenario = None
-                    baseline = nofault_baseline.stall_seconds
-                else:
-                    baseline = replay_baseline(
-                        eval_, store, latency=latency, cache_capacity=capacity,
-                        policy=policy, shared_budget=shared_budget,
-                        scenario=scenario,
-                    ).stall_seconds
-                for dispatch in dispatch_modes:
-                    for mode in modes if modes is not None else available(kind="pos"):
-                        predictor = make_pos_predictor(mode, config=cfg)
-                        predictor.warm(train.accesses)
-                        results.append(
-                            replay(
-                                eval_,
-                                predictor,
-                                store,
-                                reg,
-                                latency=latency,
-                                cache_capacity=capacity,
-                                policy=policy,
-                                shared_budget=shared_budget,
-                                dispatch=dispatch,
-                                baseline_stall_seconds=baseline,
-                                calibration=calibration,
-                                scenario=scenario,
-                                rfo=rfo,
+            for wq in write_quorums:
+                # the no-prefetch reference never dispatches: one baseline
+                # serves every dispatch mode of this (capacity, policy,
+                # quorum) cell
+                nofault_baseline = replay_baseline(
+                    eval_, store, latency=latency, cache_capacity=capacity,
+                    policy=policy, shared_budget=shared_budget,
+                    write_quorum=wq,
+                )
+                # crash-time anchor: the stall-free floor (think + hops) is
+                # the one duration every replay of this cell shares — a
+                # fraction of the *baseline* end would fall past the end of
+                # a well-prefetched run (which finishes several times
+                # faster) and never fire.  Quorum waits count as stall, so
+                # the anchor is also quorum-invariant: every scenario fires
+                # its faults at the same virtual instant across quorums.
+                end_t = nofault_baseline.t - nofault_baseline.stall_seconds
+                for scenario_name in scenarios:
+                    scenario = make_scenario(scenario_name, end_t=end_t)
+                    if not scenario.is_fault:
+                        scenario = None
+                        baseline = nofault_baseline.stall_seconds
+                    else:
+                        baseline = replay_baseline(
+                            eval_, store, latency=latency,
+                            cache_capacity=capacity,
+                            policy=policy, shared_budget=shared_budget,
+                            scenario=scenario, write_quorum=wq,
+                        ).stall_seconds
+                    for dispatch in dispatch_modes:
+                        for mode in modes if modes is not None else available(kind="pos"):
+                            predictor = make_pos_predictor(mode, config=cfg)
+                            predictor.warm(train.accesses)
+                            results.append(
+                                replay(
+                                    eval_,
+                                    predictor,
+                                    store,
+                                    reg,
+                                    latency=latency,
+                                    cache_capacity=capacity,
+                                    policy=policy,
+                                    shared_budget=shared_budget,
+                                    dispatch=dispatch,
+                                    baseline_stall_seconds=baseline,
+                                    calibration=calibration,
+                                    scenario=scenario,
+                                    rfo=rfo,
+                                    write_quorum=wq,
+                                )
                             )
-                        )
     return results
 
 
@@ -1242,6 +1499,7 @@ def evaluate_apps(
     replication: int = 1,
     scenarios: Sequence[str] = ("no-fault",),
     rfo: bool = True,
+    write_quorums: Sequence[int] = (1,),
 ) -> list[ReplayResult]:
     """``calibrated=True`` replays each app under its calibrated latency
     model (``calibration.calibrated_model``) instead of the raw REPLAY
@@ -1289,6 +1547,7 @@ def evaluate_apps(
                 replication=replication,
                 scenarios=scenarios,
                 rfo=rfo,
+                write_quorums=write_quorums,
             )
         )
     return out
@@ -1353,6 +1612,17 @@ CSV_COLUMNS = tuple(k for k, _ in _COLUMNS) + (
     # _COLUMNS): keyed rows stay unique on the legacy key at the defaults
     "replication",
     "failovers",
+    # partition-tolerant recovery columns: write-quorum pricing, hedged
+    # demand reads, and readmission/anti-entropy accounting
+    "write_quorum",
+    "readmissions",
+    "resync_lines",
+    "hedged_reads",
+    "hedge_wins",
+    "quorum_writes",
+    "quorum_acks",
+    "quorum_retries",
+    "quorum_failures",
     # static-optimizer columns (core.opt): read-for-ownership landings,
     # prefix-clipped collection expansions, mean static dispatch priority,
     # write-to-clean ownership round trips, and modeled executor-pool waits
@@ -1410,14 +1680,18 @@ def _loadsim_main(args) -> None:
         policy=args.cache_policy.split(",")[0],
         max_outstanding=args.max_outstanding,
         admission_threshold=args.admission_threshold,
+        scenario=args.scenario.split(",")[0].strip() or "no-fault",
+        replication=args.replication,
+        write_quorum=int(args.write_quorum.split(",")[0] or 1),
     )
     agg = report.rows()[-1]
     print(f"# loadsim tenants={report.tenants} arrival={report.arrival} "
-          f"mode={report.mode} dispatch={report.dispatch}")
+          f"mode={report.mode} dispatch={report.dispatch} "
+          f"scenario={report.scenario}")
     print(f"#   ops={agg['ops']} mean_stall={agg['stall_mean_s']}s "
           f"fairness={report.fairness_ratio:.2f} "
           f"evicted_before_use={agg['evicted_before_use']} "
-          f"shed={agg['admission_shed']}")
+          f"shed={agg['admission_shed']} failovers={report.failovers}")
     if not args.no_csv:
         path = os.path.join(args.out, "loadgen.csv")
         write_loadgen_csv(path, report.rows(), append=args.append)
@@ -1455,7 +1729,12 @@ def main(argv: Optional[list[str]] = None) -> None:
                          "crash scenarios need R >= 2 to complete")
     ap.add_argument("--scenario", default="no-fault",
                     help="comma-separated failure scenarios to sweep "
-                         "(no-fault, straggler, crash)")
+                         "(no-fault, straggler, crash, partition, "
+                         "crash+revive, straggler+hedge)")
+    ap.add_argument("--write-quorum", default="1",
+                    help="comma-separated write quorums W to sweep: each "
+                         "dirty write waits for W-of-R replica acks on the "
+                         "app clock (1 = async/sloppy replication)")
     ap.add_argument("--calibrated", action="store_true",
                     help="replay each app under its calibrated latency model "
                          "(fitted scales from artifacts/predict/calibration.csv) "
@@ -1507,6 +1786,7 @@ def main(argv: Optional[list[str]] = None) -> None:
     policies = tuple(p for p in args.cache_policy.split(",") if p)
     dispatch_modes = tuple(d for d in args.dispatch.split(",") if d)
     scenarios = tuple(s for s in args.scenario.split(",") if s)
+    write_quorums = tuple(int(w) for w in args.write_quorum.split(",") if w)
     results = evaluate_apps(
         apps=apps, modes=modes, rop_depth=args.rop_depth, cache_capacities=capacities,
         policies=policies, shared_budget=args.shared_budget,
@@ -1515,6 +1795,7 @@ def main(argv: Optional[list[str]] = None) -> None:
         calibrated=args.calibrated,
         placement=args.placement, replication=args.replication,
         scenarios=scenarios, rfo=not args.no_rfo,
+        write_quorums=write_quorums,
     )
     print(format_table(results))
     if not args.no_csv:

@@ -59,7 +59,7 @@ LOADGEN_COLUMNS = [
     "cache_capacity", "shared_budget", "max_outstanding", "tenant", "app",
     "jobs", "ops", "stall_p50_s", "stall_p99_s", "stall_p999_s",
     "stall_mean_s", "stall_total_s", "evicted_before_use", "admission_shed",
-    "fairness_ratio", "wall_s", "seed",
+    "fairness_ratio", "wall_s", "seed", "scenario", "failovers",
 ]
 
 #: default service mix, cheapest-first: heavy-tailed weights 1/rank mean
@@ -119,6 +119,7 @@ class TenantResult:
     stall_total_s: float
     evicted_before_use: int
     admission_shed: int
+    failovers: int = 0
 
 
 @dataclass
@@ -137,6 +138,8 @@ class LoadsimReport:
     total_stall_s: float
     evictions: int
     exec_delayed: int
+    scenario: str = "no-fault"
+    failovers: int = 0
 
     def rows(self) -> list[dict]:
         """CSV rows (LOADGEN_COLUMNS): one per tenant + one ALL aggregate."""
@@ -148,6 +151,7 @@ class LoadsimReport:
             "shared_budget": self.shared_budget,
             "max_outstanding": self.max_outstanding,
             "fairness_ratio": "", "wall_s": "", "seed": self.seed,
+            "scenario": self.scenario,
         }
         out = []
         for tr in self.per_tenant:
@@ -161,6 +165,7 @@ class LoadsimReport:
                 stall_total_s=round(tr.stall_total_s, 9),
                 evicted_before_use=tr.evicted_before_use,
                 admission_shed=tr.admission_shed,
+                failovers=tr.failovers,
             )
             out.append(row)
         agg = dict(base)
@@ -175,6 +180,7 @@ class LoadsimReport:
                                    for tr in self.per_tenant),
             admission_shed=sum(tr.admission_shed for tr in self.per_tenant),
             fairness_ratio=round(self.fairness_ratio, 4),
+            failovers=self.failovers,
         )
         out.append(agg)
         return out
@@ -243,25 +249,49 @@ def run_loadsim(
     executor_workers: int = 8,
     think_mean_s: float = 2e-3,
     n_services: int = 4,
+    scenario: str = "no-fault",
+    replication: int = 1,
+    write_quorum: int = 1,
 ) -> LoadsimReport:
     """Simulate ``tenants`` concurrent sessions over one shared store on
     the virtual clock and return per-tenant tail-latency, interference and
-    shed accounting.  Fully deterministic for a given argument set."""
+    shed accounting.  Fully deterministic for a given argument set.
+
+    A failure ``scenario`` (pos.latency.SCENARIO_NAMES) injects faults on
+    the shared engine's clock — the heap driver dispatches events in global
+    virtual-time order, so a crash/partition fires at one well-defined
+    instant across all tenants and failovers attribute to the tenant whose
+    access (or prefetch) tripped over it.  Fault times anchor on the fleet's
+    stall-free floor (total think time), which is scenario- and
+    quorum-invariant."""
     kind, rate = parse_arrival(arrival)
     mix = list(mix)
     client, traces = _record_shared_catalog(mix, n_services=n_services)
     store = client.store
-    engine = VirtualReplay(
-        store, latency=latency, cache_capacity=cache_capacity,
-        policy=policy, shared_budget=shared_budget, dispatch=dispatch,
-        executor_workers=executor_workers,
-    )
+    if replication != store.replication:
+        store.rebuild_placement(store.placement_name,
+                                replication=replication)
 
     rng = random.Random(seed)
     weights = heavy_tailed_weights(len(mix))
     assignment = rng.choices(mix, weights=weights, k=tenants)
     cat = _catalog()
     per_tenant_rate = rate / tenants if kind == "poisson" else 0.0
+
+    sc = None
+    if scenario and scenario != "no-fault":
+        from repro.pos.latency import make_scenario
+
+        total_access = jobs * sum(
+            sum(1 for ev in traces[a] if ev.kind != METHOD_ENTRY)
+            for a in assignment)
+        sc = make_scenario(scenario, end_t=total_access * latency.think)
+    engine = VirtualReplay(
+        store, latency=latency, cache_capacity=cache_capacity,
+        policy=policy, shared_budget=shared_budget, dispatch=dispatch,
+        executor_workers=executor_workers, scenario=sc,
+        write_quorum=write_quorum,
+    )
 
     ts: list[_Tenant] = []
     for i in range(tenants):
@@ -353,6 +383,7 @@ def run_loadsim(
             stall_total_s=tn.hist.sum,
             evicted_before_use=engine.evicted_by_tenant.get(tn.label, 0),
             admission_shed=tn.shed,
+            failovers=engine.failovers_by_tenant.get(tn.label, 0),
         ))
     fairness = (max(means) / max(min(means), 1e-12)) if means else 0.0
     return LoadsimReport(
@@ -362,6 +393,7 @@ def run_loadsim(
         seed=seed, per_tenant=per, fairness_ratio=fairness,
         total_stall_s=engine.stall_seconds, evictions=engine.evictions,
         exec_delayed=engine.exec_delayed,
+        scenario=scenario or "no-fault", failovers=engine.failovers,
     )
 
 

@@ -189,7 +189,14 @@ class StoreFaultDetector:
                 self.straggler.record(ds_id, seconds)
 
     def readmit(self, ds_id) -> None:
+        """Re-admit a returned service: heartbeat bookkeeping resets AND its
+        straggler history is dropped — a readmitted service starts with a
+        clean disk-time baseline instead of being instantly re-flagged on
+        the strikes it accumulated while degraded."""
         self.monitor.readmit(ds_id)
+        with self._lock:
+            self.straggler._durations.pop(ds_id, None)
+            self.straggler._strikes.pop(ds_id, None)
 
     def tick(self, force: bool = False) -> None:
         """Amortized detection scan; ``force`` runs it regardless of the

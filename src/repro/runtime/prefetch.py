@@ -47,6 +47,8 @@ class StreamMetrics:
     batch_dispatches: int = 0  # pool submissions made by batched group fetches
     dedup_suppressed: int = 0  # paths suppressed pre-submission (cached/in-flight)
     fetch_timeouts: int = 0  # in-flight waits that expired; served via sync fallback
+    hedged_fetches: int = 0  # straggling in-flight waits raced by a sync fetch
+    hedge_wins: int = 0  # hedged fetches that beat the straggling lane
 
 
 class HostParamStore:
@@ -112,6 +114,7 @@ class WeightStreamer:
         registry=None,
         tracer=None,
         fetch_timeout: float = 30.0,
+        hedge_delay: float = 0.0,
     ):
         self.store = store
         self.plan = plan
@@ -136,6 +139,11 @@ class WeightStreamer:
         self._pool = ThreadPoolExecutor(max_workers=self._workers,
                                         thread_name_prefix="stream")
         self.fetch_timeout = fetch_timeout
+        # hedged fetches (0.0 = off): a get() waiting on an in-flight lane
+        # gives it hedge_delay seconds, then races it with a synchronous
+        # fetch and serves whichever copy lands first — the streaming
+        # analogue of the ObjectStore's hedged demand reads
+        self.hedge_delay = hedge_delay
         self._groups = self._group_order()
         self._done = False
         self.group_log: list[int] = []  # entered group indices (miner food)
@@ -323,9 +331,30 @@ class WeightStreamer:
             self._fetch_async(path)
             with self._lock:
                 ev = self._inflight.get(path)
-        landed = ev.wait(timeout=self.fetch_timeout) if ev is not None else True
+        landed, hedge_arr = True, None
+        if ev is not None:
+            if was_inflight and self.hedge_delay > 0:
+                # hedged fetch: give the straggling lane hedge_delay to
+                # land, then race it synchronously — first copy serves
+                landed = ev.wait(timeout=min(self.hedge_delay,
+                                             self.fetch_timeout))
+                if not landed:
+                    with self._lock:
+                        self.metrics.hedged_fetches += 1
+                    hedge_arr = self.store.fetch(path)
+                    landed = ev.is_set()
+            else:
+                landed = ev.wait(timeout=self.fetch_timeout)
         with self._lock:
             arr = self._cache.get(path)
+            if arr is None and hedge_arr is not None:
+                # the hedge beat the lane: land + serve its copy (the lane
+                # will overwrite the cache entry later, idempotently)
+                self.metrics.hedge_wins += 1
+                self.metrics.fetches += 1
+                self.metrics.bytes_moved += hedge_arr.nbytes
+                self._cache[path] = arr = hedge_arr
+                landed = True
         if not landed or arr is None:
             # The in-flight wait expired (or the fetch errored and released
             # its event without landing anything): the old code did

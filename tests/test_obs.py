@@ -394,7 +394,8 @@ _GATE_HEADER = (
     "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s,"
     "placement,replication,scenario,failovers,"
     "rfo_prefetches,truncated_hints,hint_priority_mean,ownership_upgrades,"
-    "exec_delayed\n"
+    "exec_delayed,write_quorum,readmissions,resync_lines,hedged_reads,"
+    "hedge_wins,quorum_writes,quorum_acks,quorum_retries,quorum_failures\n"
 )
 
 

@@ -454,7 +454,9 @@ def test_compare_predict_gate_catches_drops_and_missing_rows(tmp_path):
               "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s,"
               "placement,replication,scenario,failovers,"
               "rfo_prefetches,truncated_hints,hint_priority_mean,"
-              "ownership_upgrades,exec_delayed\n")
+              "ownership_upgrades,exec_delayed,write_quorum,readmissions,"
+              "resync_lines,hedged_reads,hedge_wins,quorum_writes,"
+              "quorum_acks,quorum_retries,quorum_failures\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header
                     + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n"
@@ -488,7 +490,9 @@ def test_compare_predict_gate_enforces_write_columns(tmp_path):
               "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s,"
               "placement,replication,scenario,failovers,"
               "rfo_prefetches,truncated_hints,hint_priority_mean,"
-              "ownership_upgrades,exec_delayed\n")
+              "ownership_upgrades,exec_delayed,write_quorum,readmissions,"
+              "resync_lines,hedged_reads,hedge_wins,quorum_writes,"
+              "quorum_acks,quorum_retries,quorum_failures\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header + "bank,setAllTransCustomers,static-capre,64,lru,0.95,90.0,21,21,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n")
     # (a) header without the write columns
@@ -520,7 +524,9 @@ def test_update_baseline_refuses_to_shrink_the_gate(tmp_path, capsys):
               "stall_p50_s,stall_p99_s,stall_p999_s,calib_scale,calibrated_stall_s,"
               "placement,replication,scenario,failovers,"
               "rfo_prefetches,truncated_hints,hint_priority_mean,"
-              "ownership_upgrades,exec_delayed\n")
+              "ownership_upgrades,exec_delayed,write_quorum,readmissions,"
+              "resync_lines,hedged_reads,hedge_wins,quorum_writes,"
+              "quorum_acks,quorum_retries,quorum_failures\n")
     base = tmp_path / "baseline.csv"
     base.write_text(header
                     + "bank,auditAll,static-capre,64,lru,0.99,98.9,0,0,0,0,,per-oid,0,0,0.0,0.0,0.0,1.0,0.0\n"
